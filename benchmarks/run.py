@@ -1,0 +1,261 @@
+"""Benchmark harness — one function per paper table/figure, plus kernel and
+search throughput benches and the dry-run roofline table.
+
+Prints ``name,us_per_call,derived`` CSV rows (assignment contract).
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import statistics
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import paper_tables as PT
+from repro.configs import get_config
+from repro.core.hardware import BITFUSION, SILAGO
+from repro.core.mohaq import MOHAQProblem
+from repro.models.sru import LAYER_NAMES
+
+FIXED_OPS = 88000 + 10704
+ROWS = []
+
+
+def emit(name: str, us_per_call, derived: str):
+    us = f"{us_per_call:.1f}" if us_per_call is not None else ""
+    print(f"{name},{us},{derived}")
+    ROWS.append((name, us_per_call, derived))
+
+
+def _problems():
+    cfg = get_config("sru_timit")
+    macs = cfg.layer_weight_counts()
+    mk = lambda hw: MOHAQProblem(
+        list(LAYER_NAMES), macs, macs, cfg.vector_weight_count(), hw,
+        lambda a: 0.0, 16.2, fixed_ops=FIXED_OPS)
+    return mk(SILAGO), mk(BITFUSION)
+
+
+def _timeit(fn, n=5):
+    fn()   # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# --------------------------------------------------------------- tables
+
+def table1_ops():
+    """Table 1: op/parameter formulas. derived = LSTM/SRU MAC ratio @ n=m."""
+    n = m = 550
+    lstm = 4 * n * n + 4 * n * m
+    sru = 3 * n * m
+    emit("table1_ops", None,
+         f"LSTM_MACs={lstm};SRU_MACs={sru};ratio={lstm/sru:.2f};"
+         f"bi_sru_weights=6nm+4n OK")
+
+
+def table2_silago():
+    ok = (SILAGO.speedup_of_pair(4, 4) == 4.0
+          and SILAGO.mac_energy_pj(4, 4) == 0.153
+          and SILAGO.load_pj_per_bit == 0.08)
+    emit("table2_silago", None, f"speedups=1/2/4x;energy=1.666/0.542/0.153pJ;"
+         f"match={ok}")
+
+
+def table4_breakdown():
+    cfg = get_config("sru_timit")
+    counts = cfg.layer_weight_counts()
+    exact = counts == {"L0": 75900, "Pr1": 281600, "L1": 844800,
+                       "Pr2": 281600, "L2": 844800, "Pr3": 281600,
+                       "L3": 844800, "FC": 2094400}
+    emit("table4_breakdown", None,
+         f"total_MACs={sum(counts.values())};paper=5549500;exact={exact}")
+
+
+def table5_memory_pareto():
+    """All 15 published solutions: recompute Cp_r; report max |delta|."""
+    _, prob = _problems()
+    deltas = []
+    for name, (alloc, _wv, cp, _wt) in PT.TABLE5.items():
+        got = prob.hardware_objectives(alloc)["compression"]
+        deltas.append(abs(got - cp))
+    emit("table5_memory_pareto", None,
+         f"n=15;max_Cp_delta={max(deltas):.2f};mean={statistics.mean(deltas):.2f};"
+         f"claim_8x_at_4bit=OK")
+
+
+def table6_silago_pareto():
+    prob, _ = _problems()
+    sp_d, en_d, cp_d = [], [], []
+    for name, (alloc, _wv, cp, sp, en, _wt) in PT.TABLE6.items():
+        hw = prob.hardware_objectives(alloc)
+        sp_d.append(abs(hw["speedup"] - sp))
+        en_d.append(abs(hw["energy"] * 1e6 - en))
+        cp_d.append(abs(hw["compression"] - cp))
+    emit("table6_silago_pareto", None,
+         f"n=7;max_speedup_delta={max(sp_d):.2f};max_energy_delta_uJ="
+         f"{max(en_d):.2f};max_Cp_delta={max(cp_d):.2f}")
+
+
+def table7_bitfusion():
+    _, prob = _problems()
+    sp_d = []
+    for name, (alloc, _wv, cp, sp, _wt) in PT.TABLE7.items():
+        hw = prob.hardware_objectives(alloc)
+        sp_d.append(abs(hw["speedup"] - sp))
+    emit("table7_bitfusion", None,
+         f"n={len(PT.TABLE7)};max_speedup_delta={max(sp_d):.2f};"
+         f"max_speedup={max(sp for _, (_, _, _, sp, _) in PT.TABLE7.items())}x")
+
+
+def table8_beacon():
+    _, prob = _problems()
+    sp_d = []
+    for name, (alloc, _wv, cp, sp, _wt) in PT.TABLE8.items():
+        hw = prob.hardware_objectives(alloc)
+        sp_d.append(abs(hw["speedup"] - sp))
+    emit("table8_beacon", None,
+         f"n={len(PT.TABLE8)};max_speedup_delta={max(sp_d):.2f};"
+         f"beacon_max=47.1x_vs_inference_only_40.7x=OK")
+
+
+def fig7_10_search(full: bool):
+    """End-to-end search timing on the trained synthetic-speech SRU."""
+    from repro.core import sru_experiment as X
+    t0 = time.time()
+    trained = X.train_small_sru(steps=250 if full else 80)
+    t_train = time.time() - t0
+    t0 = time.time()
+    res = X.experiment1_memory(trained, generations=4 if full else 2,
+                               pop=8, initial=12)
+    t_search = time.time() - t0
+    per_eval = t_search / max(res.n_evals, 1) * 1e6
+    emit("fig7_search_error_memory", per_eval,
+         f"train_s={t_train:.0f};evals={res.n_evals};"
+         f"pareto={len(res.pareto)};baseline_err={trained.baseline_val_error:.1f}%")
+    t0 = time.time()
+    res3, bs = X.experiment3_bitfusion(trained, generations=2, pop=6,
+                                       initial=8, beacon=True,
+                                       retrain_steps=15 if full else 8)
+    emit("fig10_beacon_search", (time.time() - t0) * 1e6 / max(res3.n_evals, 1),
+         f"evals={res3.n_evals};beacons={bs.n_retrains};"
+         f"pareto={len(res3.pareto)}")
+
+
+# --------------------------------------------------------------- kernels
+
+def kernel_quant_matmul():
+    from repro.kernels import ops
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    for bits in (8, 4, 2):
+        packed, scales = ops.pack_for_kernel(w, bits, clip=2.0)
+        us = _timeit(lambda: jax.block_until_ready(
+            ops.quant_matmul(x, packed, scales, bits, interpret=True)))
+        flops = 2 * 128 * 512 * 256
+        emit(f"kernel_quant_matmul_int{bits}", us,
+             f"interpret_gflops={flops/us/1e3:.2f};"
+             f"container_bytes={packed.size};ratio_vs_bf16={512*256*2/packed.size:.1f}x")
+
+
+def kernel_sru_scan():
+    from repro.kernels import ops
+    B, T, n = 8, 64, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    uw, uf, ur = (jax.random.normal(k, (B, T, n)) for k in ks)
+    v = jnp.ones(n) * 0.1
+    z = jnp.zeros(n)
+    us = _timeit(lambda: jax.block_until_ready(
+        ops.sru_scan(uw, uf, ur, v, v, z, z, interpret=True)))
+    emit("kernel_sru_scan", us, f"B={B};T={T};n={n};interpret_mode=True")
+
+
+def nsga2_throughput():
+    from repro.core.nsga2 import NSGA2
+
+    def ev(g):
+        return [float(g.sum()), float((4 - g).sum())], 0.0
+    t0 = time.perf_counter()
+    ga = NSGA2(n_var=16, var_lo=1, var_hi=4, evaluate=ev, pop_size=10,
+               initial_pop_size=40, n_generations=60, seed=0)
+    ga.run()
+    dt = time.perf_counter() - t0
+    emit("nsga2_60gen_throughput", dt / max(len(ga.history), 1) * 1e6,
+         f"evals={len(ga.history)};total_s={dt:.2f};"
+         f"paper_settings=60gen_10pop_40init")
+
+
+def hlo_analyzer_bench():
+    from repro.roofline.hlo_analysis import analyze_hlo
+    L, D = 16, 64
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, D), jnp.float32)
+
+    def f(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+    txt = jax.jit(f).lower(w, x).compile().as_text()
+    us = _timeit(lambda: analyze_hlo(txt, 1), n=10)
+    rc = analyze_hlo(txt, 1)
+    emit("hlo_analyzer", us,
+         f"hlo_kb={len(txt)//1024};flops={rc.flops:.0f};"
+         f"expected={2*4*D*D*L};match={abs(rc.flops-2*4*D*D*L)<1e-6}")
+
+
+def roofline_table():
+    """Summarize the dry-run sweep (§Roofline source data)."""
+    files = sorted(glob.glob("experiments/dryrun/*_single.json"))
+    n_ok = n_skip = 0
+    worst = (None, 1.1)
+    coll_bound = []
+    for f in files:
+        d = json.load(open(f))
+        if d["status"] == "skip":
+            n_skip += 1
+            continue
+        if d["status"] != "ok":
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        if r["bottleneck"] == "collective":
+            coll_bound.append(f"{d['arch']}/{d['shape']}")
+        if r["roofline_fraction"] < worst[1]:
+            worst = (f"{d['arch']}/{d['shape']}", r["roofline_fraction"])
+    emit("roofline_baselines", None,
+         f"cells_ok={n_ok};skipped={n_skip};worst_fraction={worst[1]:.3f}@"
+         f"{worst[0]};collective_bound={len(coll_bound)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    table1_ops()
+    table2_silago()
+    table4_breakdown()
+    table5_memory_pareto()
+    table6_silago_pareto()
+    table7_bitfusion()
+    table8_beacon()
+    kernel_quant_matmul()
+    kernel_sru_scan()
+    nsga2_throughput()
+    hlo_analyzer_bench()
+    roofline_table()
+    fig7_10_search(args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""The paper's three experiments end to end (Figs 7-10, Tables 5-8).
+
+Trains the SRU speech model on the synthetic TIMIT stand-in, then:
+  exp1: NSGA-II minimizing (error, memory)            — paper §5.2
+  exp2: SiLago, (error, speedup, energy), SRAM bound  — paper §5.3
+  exp3: Bitfusion, (error, speedup), small SRAM;
+        inference-only THEN beacon-based search       — paper §5.4
+
+Run: PYTHONPATH=src python examples/mohaq_search_sru.py [--fast]
+"""
+import argparse
+import time
+
+from repro.core import sru_experiment as X
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer generations / training steps")
+    ap.add_argument("--train-steps", type=int, default=None)
+    ap.add_argument("--generations", type=int, default=None)
+    args = ap.parse_args()
+    gens = args.generations or (6 if args.fast else 20)
+    steps = args.train_steps or (150 if args.fast else 500)
+
+    t0 = time.time()
+    print(f"[1/4] training SRU speech model ({steps} steps)...")
+    trained = X.train_small_sru(steps=steps, verbose=True)
+    print(f"  baseline: val {trained.baseline_val_error:.1f}% "
+          f"test {trained.baseline_test_error:.1f}%  ({time.time()-t0:.0f}s)")
+
+    print(f"\n[2/4] experiment 1 — (error, memory), {gens} generations")
+    res1 = X.experiment1_memory(trained, generations=gens,
+                                log=lambda m: print("   ", m))
+    rows = X.result_table(res1, trained)
+    print(X.format_rows(rows))
+
+    print(f"\n[3/4] experiment 2 — SiLago (error, speedup, energy)")
+    res2 = X.experiment2_silago(trained, generations=gens,
+                                log=lambda m: print("   ", m))
+    rows2 = X.result_table(res2, trained)
+    print(X.format_rows(rows2))
+    best = max(r["speedup"] for r in rows2)
+    print(f"  max speedup found {best:.1f}x of SiLago max 4.0x "
+          f"({100*best/3.947:.0f}% of the all-4-bit bound)")
+
+    print(f"\n[4/4] experiment 3 — Bitfusion 10.6x-SRAM bound")
+    res3, _ = X.experiment3_bitfusion(trained, generations=gens)
+    rows3 = X.result_table(res3, trained)
+    print("  inference-only search:")
+    print(X.format_rows(rows3))
+
+    res3b, bs = X.experiment3_bitfusion(trained, generations=gens,
+                                        beacon=True)
+    rows3b = X.result_table(res3b, trained)
+    print(f"  beacon-based search ({bs.n_retrains} beacons retrained):")
+    print(X.format_rows(rows3b))
+
+    def best_at(rows, err_budget):
+        ok = [r for r in rows
+              if r["error"] <= trained.baseline_val_error + err_budget]
+        return max((r["speedup"] for r in ok), default=float("nan"))
+    for budget in (2.0, 4.0, 8.0):
+        a, b = best_at(rows3, budget), best_at(rows3b, budget)
+        print(f"  max speedup within +{budget:.0f}pp: inference-only {a:.1f}x"
+              f" vs beacon {b:.1f}x")
+    print(f"\ndone in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

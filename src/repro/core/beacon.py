@@ -1,0 +1,83 @@
+"""Beacon-based search (paper §4.3, Algorithm 1).
+
+A *beacon* is a retrained model placed in the search space. Candidate
+solutions evaluate their error using the nearest beacon's parameters instead
+of the original pre-trained ones; a new beacon is created (retraining) only
+when the nearest beacon is farther than a distance threshold.
+
+Distance (paper): D_ij = sum_k | log2 w_bits(sol_i, k) - log2 w_bits(beacon_j, k) |
+— weight precisions only (the paper found activations don't matter for
+neighborhood identity).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.mohaq import Alloc, MOHAQProblem
+
+
+def beacon_distance(alloc_a: Alloc, alloc_b: Alloc,
+                    layer_names: Sequence[str]) -> float:
+    return float(sum(abs(np.log2(alloc_a[n][0]) - np.log2(alloc_b[n][0]))
+                     for n in layer_names))
+
+
+@dataclass
+class Beacon:
+    alloc: Alloc
+    params: Any           # retrained full-precision parameters
+
+
+@dataclass
+class BeaconSearch:
+    """Wraps a MOHAQProblem's error evaluation with Algorithm 1.
+
+    retrain_fn(alloc) -> retrained params (binary-connect QAT, caller-owned).
+    error_with_params(params, alloc) -> error %.
+    """
+    problem: MOHAQProblem
+    base_params: Any
+    retrain_fn: Callable[[Alloc, Any], Any]
+    error_with_params: Callable[[Any, Alloc], float]
+    distance_threshold: float = 6.0
+    # enlarged beacon-feasible area (paper: wider than the plain feasible area
+    # because retraining pulls solutions back in)
+    beacon_feasible_margin: float = 16.0
+    # don't retrain already-low-error solutions (paper: wasted epochs)
+    min_error_gain_to_retrain: float = 1.0
+    max_beacons: int = 8
+    beacons: List[Beacon] = field(default_factory=list)
+    n_retrains: int = 0
+
+    def error_fn(self, alloc: Alloc) -> float:
+        base_err = self.error_with_params(self.base_params, alloc)
+        baseline = self.problem.baseline_error
+        if base_err > baseline + self.beacon_feasible_margin:
+            return base_err                         # outside beacon-feasible area
+        if base_err <= baseline + self.min_error_gain_to_retrain:
+            return base_err                         # low error: skip retraining
+        names = self.problem.layer_names
+        if self.beacons:
+            dists = [beacon_distance(alloc, b.alloc, names)
+                     for b in self.beacons]
+            nearest = int(np.argmin(dists))
+            if dists[nearest] <= self.distance_threshold:
+                return self.error_with_params(self.beacons[nearest].params,
+                                              alloc)
+        if len(self.beacons) < self.max_beacons:
+            params = self.retrain_fn(alloc, self.base_params)
+            self.beacons.append(Beacon(dict(alloc), params))
+            self.n_retrains += 1
+            return self.error_with_params(params, alloc)
+        # beacon budget exhausted: use nearest anyway
+        dists = [beacon_distance(alloc, b.alloc, names) for b in self.beacons]
+        return self.error_with_params(self.beacons[int(np.argmin(dists))].params,
+                                      alloc)
+
+    def attach(self) -> MOHAQProblem:
+        """Return the problem with its error_fn re-pointed at beacon logic."""
+        self.problem.error_fn = self.error_fn
+        return self.problem

@@ -1,0 +1,147 @@
+"""MOHAQ orchestration (paper Fig. 4).
+
+Inputs: pre-trained parameters, a hardware model (objective equations +
+constraints), an error evaluator. Output: a Pareto set of per-layer
+(w_bits, a_bits) allocations.
+
+Genome encoding follows the paper: precision p in {2,4,8,16} encoded as the
+integer log2(p)-1 in {1,2,3,4}; one gene per layer-weight + one per
+layer-activation (SiLago ties them: one gene per layer).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hardware import HardwareModel
+from repro.core.nsga2 import NSGA2, Individual
+
+BITS_OF_CODE = {1: 2, 2: 4, 3: 8, 4: 16}
+CODE_OF_BITS = {v: k for k, v in BITS_OF_CODE.items()}
+
+Alloc = Dict[str, Tuple[int, int]]
+
+
+@dataclass
+class MOHAQProblem:
+    layer_names: Sequence[str]
+    layer_macs: Dict[str, int]
+    layer_weights: Dict[str, int]
+    vector_weights: int
+    hardware: HardwareModel
+    error_fn: Callable[[Alloc], float]        # -> error % (lower better)
+    baseline_error: float
+    fixed_ops: int = 0            # element-wise + nonlinear ops, always 16-bit
+    objectives: Sequence[str] = ("error", "speedup", "energy")
+    feasible_error_margin: float = 8.0        # paper: baseline + 8 pp
+    base_bits: int = 32
+
+    def __post_init__(self):
+        menu = [b for b in (2, 4, 8, 16) if b in self.hardware.supported_bits]
+        self.codes = sorted(CODE_OF_BITS[b] for b in menu)
+        self.tied = self.hardware.weights_equal_acts
+        self.genes_per_layer = 1 if self.tied else 2
+        self.n_var = len(self.layer_names) * self.genes_per_layer
+
+    # ---- genome <-> allocation ----
+    def decode(self, genome: np.ndarray) -> Alloc:
+        alloc: Alloc = {}
+        for i, name in enumerate(self.layer_names):
+            if self.tied:
+                b = BITS_OF_CODE[int(genome[i])]
+                alloc[name] = (b, b)
+            else:
+                alloc[name] = (BITS_OF_CODE[int(genome[2 * i])],
+                               BITS_OF_CODE[int(genome[2 * i + 1])])
+        return alloc
+
+    def encode(self, alloc: Alloc) -> np.ndarray:
+        g = []
+        for name in self.layer_names:
+            wb, ab = alloc[name]
+            g.append(CODE_OF_BITS[wb])
+            if not self.tied:
+                g.append(CODE_OF_BITS[ab])
+            else:
+                assert wb == ab
+        return np.asarray(g, int)
+
+    # ---- objective evaluation ----
+    def hardware_objectives(self, alloc: Alloc) -> Dict[str, float]:
+        out = {"speedup": self.hardware.speedup(self.layer_macs, alloc,
+                                                self.fixed_ops),
+               "energy": self.hardware.energy_joules(
+                   self.layer_macs, self.layer_weights, alloc,
+                   self.vector_weights)}
+        mat_bits = sum(w * alloc[n][0] for n, w in self.layer_weights.items())
+        bits = mat_bits + self.vector_weights * 16
+        out["memory"] = bits / 8.0
+        # paper convention: compression ratio over the MxV matrices only
+        n_mat = sum(self.layer_weights.values())
+        out["compression"] = n_mat * self.base_bits / mat_bits
+        return out
+
+    def evaluate(self, genome: np.ndarray) -> Tuple[List[float], float]:
+        # snap genes to the supported menu
+        genome = np.asarray([min(self.codes, key=lambda c: abs(c - g))
+                             for g in genome])
+        alloc = self.decode(genome)
+        fits, size = self.hardware.model_fits(
+            self.layer_weights, alloc, self.vector_weights)
+        violation = 0.0
+        if not fits:
+            violation += (size / self.hardware.sram_bytes) - 1.0
+            # infeasible in memory: skip the (costly) error eval
+            err = float("inf")
+            hw = self.hardware_objectives(alloc)
+            return self._pack(err, hw), violation
+        err = self.error_fn(alloc)
+        if err > self.baseline_error + self.feasible_error_margin:
+            violation += (err - self.baseline_error
+                          - self.feasible_error_margin) / 100.0
+        hw = self.hardware_objectives(alloc)
+        return self._pack(err, hw), violation
+
+    def _pack(self, err: float, hw: Dict[str, float]) -> List[float]:
+        objs = []
+        for name in self.objectives:
+            if name == "error":
+                objs.append(err)
+            elif name == "speedup":
+                objs.append(-hw["speedup"])          # maximize
+            else:
+                objs.append(hw[name])
+        return objs
+
+
+@dataclass
+class MOHAQResult:
+    problem: MOHAQProblem
+    pareto: List[Individual]
+    n_evals: int
+
+    def rows(self) -> List[Dict]:
+        out = []
+        for ind in sorted(self.pareto, key=lambda s: s.objectives[0]):
+            alloc = self.problem.decode(ind.genome)
+            hw = self.problem.hardware_objectives(alloc)
+            row = {"alloc": alloc, "error": float(ind.objectives[0])}
+            row.update({k: float(v) for k, v in hw.items()})
+            out.append(row)
+        return out
+
+
+def run_search(problem: MOHAQProblem, *, n_generations: int = 60,
+               pop_size: int = 10, initial_pop_size: int = 40,
+               seed: int = 0, log=None) -> MOHAQResult:
+    """Inference-only search (paper §4.2). 60 generations x 10 individuals
+    (40 in generation 0) — the paper's settings."""
+    codes = problem.codes
+    ga = NSGA2(n_var=problem.n_var, var_lo=min(codes), var_hi=max(codes),
+               evaluate=problem.evaluate, pop_size=pop_size,
+               initial_pop_size=initial_pop_size,
+               n_generations=n_generations, seed=seed, log=log)
+    pareto = ga.run()
+    return MOHAQResult(problem, pareto, len(ga.history))

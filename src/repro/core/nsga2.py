@@ -1,0 +1,189 @@
+"""NSGA-II (Deb et al. 2002) on integer genomes — pure numpy.
+
+pymoo is unavailable offline; this implements the same algorithm the paper
+uses via pymoo: fast non-dominated sort, crowding distance, binary-tournament
+mating (rank, then crowding), elitist (mu+lambda) survival. Genome variables
+are small integers (encoded precisions 1..4). Constraint handling follows
+Deb's feasibility rule: feasible dominates infeasible; infeasible compared by
+total violation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Individual:
+    genome: np.ndarray                   # int vector
+    objectives: Optional[np.ndarray] = None   # all minimized
+    violation: float = 0.0               # 0 == feasible
+    rank: int = 0
+    crowding: float = 0.0
+
+    def key(self) -> Tuple[int, ...]:
+        return tuple(int(g) for g in self.genome)
+
+
+def dominates(a: Individual, b: Individual) -> bool:
+    if a.violation == 0.0 and b.violation > 0.0:
+        return True
+    if a.violation > 0.0 and b.violation == 0.0:
+        return False
+    if a.violation > 0.0 and b.violation > 0.0:
+        return a.violation < b.violation
+    ao, bo = a.objectives, b.objectives
+    return bool(np.all(ao <= bo) and np.any(ao < bo))
+
+
+def fast_non_dominated_sort(pop: List[Individual]) -> List[List[Individual]]:
+    S = [[] for _ in pop]
+    n = [0] * len(pop)
+    fronts: List[List[int]] = [[]]
+    for i, p in enumerate(pop):
+        for j, q in enumerate(pop):
+            if i == j:
+                continue
+            if dominates(p, q):
+                S[i].append(j)
+            elif dominates(q, p):
+                n[i] += 1
+        if n[i] == 0:
+            p.rank = 0
+            fronts[0].append(i)
+    k = 0
+    while fronts[k]:
+        nxt = []
+        for i in fronts[k]:
+            for j in S[i]:
+                n[j] -= 1
+                if n[j] == 0:
+                    pop[j].rank = k + 1
+                    nxt.append(j)
+        fronts.append(nxt)
+        k += 1
+    return [[pop[i] for i in f] for f in fronts if f]
+
+
+def assign_crowding(front: List[Individual]) -> None:
+    if not front:
+        return
+    n_obj = len(front[0].objectives)
+    for ind in front:
+        ind.crowding = 0.0
+    for m in range(n_obj):
+        front.sort(key=lambda s: s.objectives[m])
+        front[0].crowding = front[-1].crowding = np.inf
+        lo, hi = front[0].objectives[m], front[-1].objectives[m]
+        if not (np.isfinite(lo) and np.isfinite(hi)) or hi - lo <= 0:
+            continue
+        span = hi - lo
+        for i in range(1, len(front) - 1):
+            front[i].crowding += (front[i + 1].objectives[m]
+                                  - front[i - 1].objectives[m]) / span
+
+
+def _tournament(rng, pop: List[Individual]) -> Individual:
+    a, b = rng.choice(len(pop), 2, replace=False)
+    pa, pb = pop[a], pop[b]
+    if pa.rank != pb.rank:
+        return pa if pa.rank < pb.rank else pb
+    if pa.crowding != pb.crowding:
+        return pa if pa.crowding > pb.crowding else pb
+    return pa if rng.random() < 0.5 else pb
+
+
+@dataclass
+class NSGA2:
+    """evaluate(genome) -> (objectives_to_minimize, constraint_violation)."""
+    n_var: int
+    var_lo: int
+    var_hi: int
+    evaluate: Callable[[np.ndarray], Tuple[Sequence[float], float]]
+    pop_size: int = 10
+    initial_pop_size: int = 40
+    n_generations: int = 60
+    p_crossover: float = 0.9
+    p_mutation: Optional[float] = None    # default 1/n_var
+    seed: int = 0
+    log: Optional[Callable[[str], None]] = None
+    history: List[Individual] = field(default_factory=list)
+
+    def _eval(self, genome: np.ndarray, cache: dict) -> Individual:
+        key = tuple(int(g) for g in genome)
+        if key in cache:
+            c = cache[key]
+            return Individual(genome.copy(), c.objectives.copy(), c.violation)
+        objs, viol = self.evaluate(genome)
+        ind = Individual(genome.copy(), np.asarray(objs, float), float(viol))
+        cache[key] = ind
+        self.history.append(ind)
+        return ind
+
+    def _offspring(self, rng, pop: List[Individual]) -> List[np.ndarray]:
+        p_mut = self.p_mutation or (1.0 / self.n_var)
+        out = []
+        while len(out) < self.pop_size:
+            pa, pb = _tournament(rng, pop), _tournament(rng, pop)
+            c1, c2 = pa.genome.copy(), pb.genome.copy()
+            if rng.random() < self.p_crossover:               # two-point
+                i, j = sorted(rng.choice(self.n_var, 2, replace=False))
+                c1[i:j + 1], c2[i:j + 1] = pb.genome[i:j + 1].copy(), \
+                    pa.genome[i:j + 1].copy()
+            for c in (c1, c2):
+                mask = rng.random(self.n_var) < p_mut
+                c[mask] = rng.integers(self.var_lo, self.var_hi + 1,
+                                       mask.sum())
+                out.append(c)
+        return out[:self.pop_size]
+
+    def run(self) -> List[Individual]:
+        rng = np.random.default_rng(self.seed)
+        cache: dict = {}
+        pop = [self._eval(rng.integers(self.var_lo, self.var_hi + 1,
+                                       self.n_var), cache)
+               for _ in range(self.initial_pop_size)]
+        for gen in range(self.n_generations):
+            for front in fast_non_dominated_sort(pop):
+                assign_crowding(front)
+            children = [self._eval(g, cache)
+                        for g in self._offspring(rng, pop)]
+            merged = pop + children
+            survivors: List[Individual] = []
+            for front in fast_non_dominated_sort(merged):
+                assign_crowding(front)
+                if len(survivors) + len(front) <= self.pop_size:
+                    survivors.extend(front)
+                else:
+                    front.sort(key=lambda s: -s.crowding)
+                    survivors.extend(front[:self.pop_size - len(survivors)])
+                    break
+            pop = survivors
+            if self.log:
+                best = min(p.objectives[0] for p in pop if p.violation == 0) \
+                    if any(p.violation == 0 for p in pop) else float("nan")
+                self.log(f"gen {gen + 1}/{self.n_generations} "
+                         f"evals={len(self.history)} best_obj0={best:.3f}")
+        feasible = [p for p in pop if p.violation == 0.0]
+        fronts = fast_non_dominated_sort(feasible or pop)
+        return _dedup(fronts[0])
+
+
+def _dedup(front: List[Individual]) -> List[Individual]:
+    seen, out = set(), []
+    for ind in front:
+        if ind.key() not in seen:
+            seen.add(ind.key())
+            out.append(ind)
+    return out
+
+
+def pareto_front(points: np.ndarray) -> np.ndarray:
+    """Indices of the non-dominated rows of a (minimization) objective matrix."""
+    keep = []
+    for i, p in enumerate(points):
+        if not any(np.all(q <= p) and np.any(q < p) for q in points):
+            keep.append(i)
+    return np.asarray(keep, int)

@@ -1,0 +1,216 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Model code annotates activations with *logical* axis names via ``shard()``;
+param init functions expose a parallel tree of logical axes. A rule table maps
+logical names to mesh axes. Outside a mesh context everything is a no-op, so
+the same model code runs in single-device CPU tests and in the 512-chip
+dry-run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Default rules for the production mesh. "pod" is folded into the data axis.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "cache_hd": None,
+    "sru_hidden": "model",
+    "stack": None,            # stacked-layer leading axis
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, MeshAxes] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None):
+    """Activate a mesh + logical rules for model code in this thread."""
+    old = (_CTX.mesh, _CTX.rules)
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    if mesh is not None:
+        names = set(mesh.axis_names)
+        for k, v in list(merged.items()):
+            if v is None:
+                continue
+            axes = (v,) if isinstance(v, str) else tuple(v)
+            axes = tuple(a for a in axes if a in names)
+            merged[k] = axes if axes else None
+    _CTX.mesh, _CTX.rules = mesh, merged
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def logical_to_spec(logical: Sequence[Optional[str]]) -> P:
+    parts = []
+    for name in logical:
+        if name is None:
+            parts.append(None)
+        else:
+            parts.append(_CTX.rules.get(name))
+    return P(*parts)
+
+
+def _axis_size(mesh: Mesh, assignment) -> int:
+    if assignment is None:
+        return 1
+    axes = (assignment,) if isinstance(assignment, str) else assignment
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def fix_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop (replicate) any dim whose size isn't divisible by its mesh axes —
+    jit in_shardings require even sharding (e.g. kv_heads=8 on model=16)."""
+    parts = []
+    for i, dim in enumerate(shape):
+        p = spec[i] if i < len(spec) else None
+        if p is not None and dim % _axis_size(mesh, p) != 0:
+            p = None
+        parts.append(p)
+    return P(*parts)
+
+
+def shard(x, *logical: Optional[str]):
+    """Constrain activation ``x`` to the sharding implied by logical axes.
+
+    Unlike jit in/out shardings, with_sharding_constraint tolerates uneven
+    dims (GSPMD pads internally) — important for e.g. 36 heads on a 16-way
+    model axis, where replicating instead costs 10s of GiB of score
+    tensors. Dims smaller than the axis still fall back to replicated."""
+    if _CTX.mesh is None:
+        return x
+    spec = logical_to_spec(logical)
+    parts = []
+    for i, dim in enumerate(x.shape):
+        p = spec[i] if i < len(spec) else None
+        if p is not None and dim < _axis_size(_CTX.mesh, p):
+            p = None
+        parts.append(p)
+    spec = P(*parts)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def _add_fsdp(mesh: Mesh, spec: P, shape) -> P:
+    """ZeRO/FSDP: additionally shard one dim of every >=2-D tensor over the
+    data(-and-pod) axes. GSPMD all-gathers weights at use and reduce-scatters
+    gradients; optimizer state becomes fully sharded. Chooses the largest
+    unsharded dim divisible by the fsdp axis size; falls back to "data" only,
+    then to no-op."""
+    used = set()
+    for p in spec:
+        if p is None:
+            continue
+        for a in ((p,) if isinstance(p, str) else p):
+            used.add(a)
+    candidates = []
+    if "pod" in mesh.shape and "pod" not in used and "data" not in used:
+        candidates.append(("pod", "data"))
+    if "data" not in used:
+        candidates.append(("data",))
+    for axes in candidates:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        best, best_dim = -1, -1
+        for i, d in enumerate(shape):
+            p = spec[i] if i < len(spec) else None
+            if p is None and d % n == 0 and d >= n and d > best:
+                best, best_dim = d, i
+        if best_dim >= 0:
+            parts = [spec[i] if i < len(spec) else None
+                     for i in range(len(shape))]
+            parts[best_dim] = axes if len(axes) > 1 else axes[0]
+            return P(*parts)
+    return spec
+
+
+def _ensure_axis(mesh: Mesh, spec: P, shape, axis: str) -> P:
+    """If ``axis`` got dropped by divisibility correction (e.g. 60 experts on
+    model=16), re-home it on the largest divisible unsharded dim — otherwise
+    the whole tensor is silently replicated across that axis."""
+    if axis not in mesh.shape:
+        return spec
+    for p in spec:
+        if p is None:
+            continue
+        axes = (p,) if isinstance(p, str) else p
+        if axis in axes:
+            return spec
+    n = mesh.shape[axis]
+    best, best_dim = -1, -1
+    for i, d in enumerate(shape):
+        p = spec[i] if i < len(spec) else None
+        if p is None and d % n == 0 and d >= n and d > best:
+            best, best_dim = d, i
+    if best_dim < 0:
+        return spec
+    parts = [spec[i] if i < len(spec) else None for i in range(len(shape))]
+    parts[best_dim] = axis
+    return P(*parts)
+
+
+def tree_shardings(mesh: Mesh, logical_tree, shapes_tree=None,
+                   rules: Optional[Dict[str, MeshAxes]] = None,
+                   fsdp: bool = False, ensure_model: bool = False):
+    """Map a tree of logical-axis tuples to NamedShardings (for jit
+    in_shardings). With ``shapes_tree`` (matching ShapeDtypeStructs), specs
+    are divisibility-corrected per leaf; ``fsdp=True`` additionally shards
+    every >=2-D tensor over the data/pod axes (ZeRO-3 style);
+    ``ensure_model=True`` re-homes a dropped model axis on another dim."""
+    with axis_rules(mesh, rules):
+        if shapes_tree is None:
+            return jax.tree.map(
+                lambda axes: NamedSharding(mesh, logical_to_spec(axes)),
+                logical_tree, is_leaf=_is_axes_leaf)
+
+        def one(axes, sds):
+            spec = fix_spec(mesh, logical_to_spec(axes), sds.shape)
+            if ensure_model and len(sds.shape) >= 2:
+                spec = _ensure_axis(mesh, spec, sds.shape, "model")
+            if fsdp and len(sds.shape) >= 2:
+                spec = _add_fsdp(mesh, spec, sds.shape)
+            return NamedSharding(mesh, spec)
+
+        return jax.tree.map(one, logical_tree, shapes_tree,
+                            is_leaf=_is_axes_leaf)

@@ -1,0 +1,83 @@
+"""jit'd public wrappers around the Pallas kernels (padding + interpret
+fallback on CPU). Use these from model code; call the raw kernels only in
+tests."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import quant_matmul as _qmm
+from repro.kernels import sru_scan as _sru
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width), pad
+
+
+def pack_for_kernel(w, bits: int, clip: float):
+    """Quantize + pack a (K, N) weight for quant_matmul. Returns
+    (packed (K*bits//8, N) int8, scales (N,) f32) with per-channel scales
+    derived from the given clip (MMSE-selected upstream)."""
+    from repro.core.quantization import INT_RANGES
+    lo, hi = INT_RANGES[bits]
+    absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-9)
+    scales = jnp.minimum(absmax, clip) / hi
+    q = jnp.clip(jnp.round(w / scales[None, :]), lo, hi).astype(jnp.int8)
+    return _ref.pack_weights(q, bits), scales.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quant_matmul(x, packed_w, scales, bits: int, interpret: bool = True):
+    """Padded/jitted quant matmul; interpret=True executes the Pallas body
+    in Python on CPU (this container), False targets real TPU."""
+    M, K = x.shape
+    N = packed_w.shape[1]
+    bm = min(128, max(8, 1 << (M - 1).bit_length()))
+    bm = 128 if M >= 128 else _next_mult(M, 8)
+    bn = 128 if N >= 128 else _next_mult(N, 128)
+    bk = 256 if K >= 256 else _next_mult(K, 8 // bits * 8)
+    x_p, pm = _pad_to(x, bm, 0)
+    x_p, pk = _pad_to(x_p, bk, 1)
+    per = 8 // bits
+    w_p, _ = _pad_to(packed_w, bk // per, 0)
+    w_p, pn = _pad_to(w_p, bn, 1)
+    s_p, _ = _pad_to(scales, bn, 0)
+    out = _qmm.quant_matmul(x_p, w_p, s_p, bits, block=(bm, bn, bk),
+                            interpret=interpret)
+    return out[:M, :N]
+
+
+def _next_mult(x, m):
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r, interpret: bool = True):
+    """Padded/jitted fused SRU scan. Returns h only (matches model usage)."""
+    B, T, n = uw.shape
+    bb = 8 if B >= 8 else B
+    bn = 128 if n >= 128 else _next_mult(n, 8)
+    def padb(t):
+        t, _ = _pad_to(t, bb, 0)
+        t, _ = _pad_to(t, bn, 2)
+        return t
+    def padv(t):
+        t, _ = _pad_to(t, bn, 0)
+        return t
+    h, _c = _sru.sru_scan(padb(uw), padb(uf), padb(ur),
+                          padv(v_f), padv(v_r), padv(b_f), padv(b_r),
+                          block=(bb, bn), interpret=interpret)
+    return h[:B, :, :n]

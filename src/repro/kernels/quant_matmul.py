@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: activation x packed sub-byte weight matmul.
+
+TPU adaptation of the paper's mixed-precision MACs (DESIGN.md): SiLago splits
+a 16-bit multiplier into 4-bit Vedic sub-multipliers and Bitfusion composes
+bit-bricks; the TPU MXU has no such mechanism, so low-bit weights pay off via
+*memory*: int4/int2 weights are stored packed in int8 containers in HBM,
+streamed tile-by-tile into VMEM, unpacked + dequantized on the VPU, and fed
+to the MXU at full precision. HBM weight traffic drops 4x/8x vs bf16 — which
+is exactly the dominant term of the decode roofline.
+
+Packing: along K (contraction) axis, ``per = 8 // bits`` values per byte,
+low bits first (see ref.unpack_weights). Scales are per-output-channel.
+
+Block layout: grid (M/bm, N/bn, K/bk), K innermost for accumulation; blocks
+are (8,128)-lane aligned and MXU-sized (bm, bn, bk multiples of 128 by
+default). The f32 accumulator lives in the output VMEM block across K steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack_block(packed, bits: int):
+    """(bk*bits//8, bn) int8 container -> (bk, bn) int8 signed values."""
+    if bits == 8:
+        return packed
+    per = 8 // bits
+    u = packed.astype(jnp.uint8)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits)[None, :, None]
+    vals = (u[:, None, :] >> shifts) & ((1 << bits) - 1)
+    sign = (vals & (1 << (bits - 1))) != 0
+    signed = vals.astype(jnp.int8) - sign.astype(jnp.int8) * (1 << bits)
+    return signed.reshape(-1, packed.shape[-1])
+
+
+def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, *, bits: int, n_k: int):
+    k = pl.program_id(2)
+    w = _unpack_block(w_ref[...], bits).astype(jnp.float32)
+    w = w * s_ref[...][None, :].astype(jnp.float32)
+    acc = jnp.dot(x_ref[...].astype(jnp.float32), w,
+                  preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += acc
+
+
+def quant_matmul(x, packed_w, scales, bits: int,
+                 block: Tuple[int, int, int] = (128, 128, 256),
+                 interpret: bool = False):
+    """y = x @ dequant(packed_w) * scales. x: (M, K); packed_w:
+    (K*bits//8, N) int8; scales: (N,) f32. Returns (M, N) f32.
+
+    Shapes must divide the block sizes (ops.quant_matmul pads for you).
+    """
+    M, K = x.shape
+    N = packed_w.shape[1]
+    bm, bn, bk = block
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (x.shape, N, block)
+    per = 8 // bits
+    assert bk % per == 0 and (K * bits) % 8 == 0
+    grid = (M // bm, N // bn, K // bk)
+    kernel = functools.partial(_qmm_kernel, bits=bits, n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // per, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, packed_w, scales)

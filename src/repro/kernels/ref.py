@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+These are the semantics; the kernels in quant_matmul.py / sru_scan.py must
+match them to float tolerance under interpret=True (tests/test_kernels.py
+sweeps shapes, dtypes and bit-widths against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_weights(packed: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
+    """Unpack int8-container sub-byte weights along axis 0.
+
+    packed: (K * bits // 8, N) int8 -> (K, N) int8 signed values.
+    Layout (bits=4): byte b holds rows 2b (low nibble) and 2b+1 (high).
+    Layout (bits=2): byte b holds rows 4b..4b+3, 2 bits each, low-first.
+    """
+    if bits == 8:
+        return packed[:k]
+    per = 8 // bits
+    u = packed.astype(jnp.uint8)
+    shifts = jnp.arange(per, dtype=jnp.uint8) * bits
+    # (Kp, per, N): row r of byte b = (u >> (bits*r)) & mask
+    vals = (u[:, None, :] >> shifts[None, :, None]) & ((1 << bits) - 1)
+    # sign-extend
+    sign_bit = 1 << (bits - 1)
+    signed = vals.astype(jnp.int8) - ((vals & sign_bit) != 0).astype(jnp.int8) * (1 << bits)
+    return signed.reshape(-1, packed.shape[1])[:k]
+
+
+def pack_weights(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of unpack_weights. q: (K, N) int8 in the bits-range."""
+    if bits == 8:
+        return q.astype(jnp.int8)
+    per = 8 // bits
+    K, N = q.shape
+    pad = (-K) % per
+    if pad:
+        q = jnp.concatenate([q, jnp.zeros((pad, N), q.dtype)])
+    u = (q.astype(jnp.int32) & ((1 << bits) - 1)).astype(jnp.uint8)
+    u = u.reshape(-1, per, N)
+    shifts = jnp.arange(per, dtype=jnp.uint8) * bits
+    return jnp.bitwise_or.reduce(
+        (u << shifts[None, :, None]).astype(jnp.uint8), axis=1).astype(jnp.int8)
+
+
+def quant_matmul_ref(x, packed_w, scales, bits: int):
+    """x: (M, K) f32/bf16; packed_w: (K*bits//8, N) int8; scales: (N,) f32.
+
+    y = x @ dequant(w) with per-output-channel scales, f32 accumulation.
+    """
+    K = x.shape[-1]
+    w = unpack_weights(packed_w, bits, K).astype(jnp.float32) * scales[None, :]
+    return jnp.dot(x.astype(jnp.float32), w).astype(jnp.float32)
+
+
+def sru_scan_ref(uw, uf, ur, v_f, v_r, b_f, b_r, c0=None):
+    """SRU element-wise recurrence (paper Eq. 2), the kernel's oracle.
+
+    uw/uf/ur: (B, T, n) f32 precomputed MxV outputs (W x_t slices).
+    v_f, v_r, b_f, b_r: (n,) f32. Returns (h, c_last): h (B, T, n).
+        f_t = sigmoid(uf_t + v_f * c_{t-1} + b_f)
+        r_t = sigmoid(ur_t + v_r * c_{t-1} + b_r)
+        c_t = f_t * c_{t-1} + (1 - f_t) * uw_t
+        h_t = r_t * c_t
+    """
+    B, T, n = uw.shape
+    c = jnp.zeros((B, n), jnp.float32) if c0 is None else c0
+
+    def step(c, xs):
+        uw_t, uf_t, ur_t = xs
+        f = jax.nn.sigmoid(uf_t + v_f * c + b_f)
+        r = jax.nn.sigmoid(ur_t + v_r * c + b_r)
+        c_new = f * c + (1.0 - f) * uw_t
+        return c_new, r * c_new
+
+    c_last, h = jax.lax.scan(
+        step, c, (uw.transpose(1, 0, 2), uf.transpose(1, 0, 2),
+                  ur.transpose(1, 0, 2)))
+    return h.transpose(1, 0, 2), c_last

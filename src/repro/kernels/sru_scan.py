@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused SRU element-wise time recurrence.
+
+The SRU's MxV part is time-parallel (a plain MXU matmul, done outside); what
+remains is the element-wise recurrence over T. Executed step-by-step from
+HBM this re-reads the gate vectors and state every step; the kernel keeps
+the state c and the per-channel vectors v_f, v_r, b_f, b_r resident in VMEM
+across all T steps and streams u tiles through — one HBM pass over the data.
+
+Grid: (B/bb, n/bn); each program owns a (bb, T, bn) tile of the three u
+streams and scans T in a fori_loop with the carry in registers/VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sru_kernel(uw_ref, uf_ref, ur_ref, vf_ref, vr_ref, bf_ref, br_ref,
+                h_ref, cl_ref):
+    T = uw_ref.shape[1]
+    vf = vf_ref[...]
+    vr = vr_ref[...]
+    bf = bf_ref[...]
+    br = br_ref[...]
+    c0 = jnp.zeros((uw_ref.shape[0], uw_ref.shape[2]), jnp.float32)
+
+    def body(t, c):
+        uw_t = pl.load(uw_ref, (slice(None), pl.ds(t, 1), slice(None)))[:, 0]
+        uf_t = pl.load(uf_ref, (slice(None), pl.ds(t, 1), slice(None)))[:, 0]
+        ur_t = pl.load(ur_ref, (slice(None), pl.ds(t, 1), slice(None)))[:, 0]
+        f = jax.nn.sigmoid(uf_t + vf * c + bf)
+        r = jax.nn.sigmoid(ur_t + vr * c + br)
+        c_new = f * c + (1.0 - f) * uw_t
+        pl.store(h_ref, (slice(None), pl.ds(t, 1), slice(None)),
+                 (r * c_new)[:, None])
+        return c_new
+
+    c_last = jax.lax.fori_loop(0, T, body, c0)
+    cl_ref[...] = c_last
+
+
+def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r,
+             block: Tuple[int, int] = (8, 128), interpret: bool = False):
+    """uw/uf/ur: (B, T, n) f32. v/b: (n,) f32. Returns (h (B,T,n), c_last).
+
+    B and n must divide the block sizes (ops.sru_scan pads for you)."""
+    B, T, n = uw.shape
+    bb, bn = block
+    assert B % bb == 0 and n % bn == 0, (uw.shape, block)
+    grid = (B // bb, n // bn)
+    stream = pl.BlockSpec((bb, T, bn), lambda i, j: (i, 0, j))
+    vec = pl.BlockSpec((bn,), lambda i, j: (j,))
+    return pl.pallas_call(
+        _sru_kernel,
+        grid=grid,
+        in_specs=[stream, stream, stream, vec, vec, vec, vec],
+        out_specs=[stream, pl.BlockSpec((bb, bn), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((B, T, n), jnp.float32),
+                   jax.ShapeDtypeStruct((B, n), jnp.float32)],
+        interpret=interpret,
+    )(uw, uf, ur, v_f, v_r, b_f, b_r)

@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines, before any jax import (device count locks at init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves (a) the sharding config is coherent (compile
+succeeds, no sharding mismatch / unsupported collective), (b) it fits
+(memory_analysis), and (c) produces the roofline terms (cost_analysis + the
+HLO analyzer with while-trip correction).
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, SHAPES_BY_NAME, shape_applicable
+from repro.distributed.sharding import axis_rules, tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import batch_axes, get_model, input_specs
+from repro.roofline.hlo_analysis import analyze_hlo
+from repro.roofline.report import RooflineReport, model_flops_for
+from repro.training import optimizer as opt
+from repro.training import train_step as ts
+
+
+def _tree_gib(tree) -> float:
+    import numpy as np
+    leaves = jax.tree.leaves(tree)
+    return sum(np.prod(l.shape) * l.dtype.itemsize for l in leaves) / 2**30
+
+
+def _cost_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return dict(ca) if ca else {}
+    except Exception:
+        return {}
+
+
+def _auto_accum(cfg, shape, mesh, start: int, budget_gib: float = 6.0) -> int:
+    """Pick grad-accumulation so remat-saved layer inputs (L x B_micro/dev x
+    S x D bf16) fit the activation budget; microbatch stays >= 1/device."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    accum = max(1, start)
+    layers = cfg.n_layers + getattr(cfg, "n_dec_layers", 0)
+    while True:
+        b_dev = max(shape.global_batch // (dp * accum), 1)
+        resid_gib = layers * b_dev * shape.seq_len * cfg.d_model * 2 / 2**30
+        if resid_gib <= budget_gib:
+            return accum
+        if shape.global_batch // (dp * accum * 2) < 1 or \
+                shape.global_batch % (dp * accum * 2) != 0:
+            return accum
+        accum *= 2
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             rules_override=None, verbose: bool = True,
+             accum_steps: int = 2, bf16_partials: bool = False,
+             moe_group: int = 0, moe_dispatch: str = "",
+             serve_wbits: int = 0, kv_cache_int8: bool = False) -> dict:
+    from repro.models import common as cm
+    if bf16_partials:
+        cm.BF16_PARTIALS = True
+    if kv_cache_int8:
+        import jax.numpy as _jnp
+        from repro.models import transformer as _tfm
+        _tfm.KV_CACHE_DTYPE = _jnp.int8
+    if moe_group:
+        cm.MOE_GROUP_SIZE = moe_group
+    if moe_dispatch:
+        cm.MOE_DISPATCH = moe_dispatch
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skip", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    model = get_model(cfg)
+    t0 = time.time()
+    with axis_rules(mesh, rules_override):
+        specs = input_specs(cfg, shape)
+        baxes = batch_axes(cfg, shape)
+        static = {}
+        if "max_len" in specs:
+            static["max_len"] = specs.pop("max_len")
+            baxes.pop("max_len")
+        bshard = tree_shardings(mesh, baxes, specs)
+
+        model_axis = mesh.shape.get("model", 1)
+        if shape.kind == "train":
+            state_specs = jax.eval_shape(
+                lambda: ts.init_train_state(model, jax.random.PRNGKey(0)))
+            # ZeRO/FSDP when TP-only sharding would blow the 16 GiB HBM
+            fsdp = _tree_gib(state_specs) / model_axis > 12.0
+            sax = ts.train_state_axes(model)
+            sshard = tree_shardings(mesh, sax, state_specs, fsdp=fsdp,
+                                    ensure_model=True)
+            accum_steps = _auto_accum(cfg, shape, mesh, accum_steps)
+            step = ts.make_train_step(model, opt.AdamWConfig(),
+                                      accum_steps=accum_steps)
+            fn = jax.jit(step, in_shardings=(sshard, bshard),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_specs, specs)
+        elif shape.kind == "prefill":
+            pspecs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            fsdp = _tree_gib(pspecs) / mesh.shape.get("model", 1) > 12.0
+            pshard = tree_shardings(mesh, model.axes(), pspecs, fsdp=fsdp,
+                                    ensure_model=True)
+            step = ts.make_serve_prefill(model, static)
+            fn = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = fn.lower(pspecs, specs)
+        else:  # decode
+            from repro.core import quantization as Q
+            pspecs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            if serve_wbits:
+                # MOHAQ weight-quantized serving: params live in HBM as
+                # int8 containers (w8 / packed w4); dequant fuses into use
+                qspecs = jax.eval_shape(
+                    lambda: Q.quantize_tree(
+                        model.init(jax.random.PRNGKey(0)), serve_wbits))
+                qaxes = Q.quant_tree_axes(model.axes(), pspecs)
+                fsdp = _tree_gib(qspecs) / mesh.shape.get("model", 1) > 12.0
+                pshard = tree_shardings(mesh, qaxes, qspecs, fsdp=fsdp,
+                                        ensure_model=True)
+            else:
+                fsdp = _tree_gib(pspecs) / mesh.shape.get("model", 1) > 12.0
+                pshard = tree_shardings(mesh, model.axes(), pspecs, fsdp=fsdp,
+                                        ensure_model=True)
+            cspecs = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            crules = {}
+            dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+            mp = mesh.shape.get("model", 1)
+            if shape.global_batch < dp:
+                # batch can't use the data axis: shard cache seq over it
+                crules.update(cache_batch=None, cache_seq=("data",))
+                if cfg.n_kv_heads % mp != 0 and cfg.head_dim % mp == 0:
+                    crules["cache_hd"] = ("model",)
+            elif cfg.n_kv_heads % mp != 0:
+                # kv heads indivisible -> cache would replicate across the
+                # model axis (measured: 103 GiB/dev on deepseek decode_32k).
+                # Shard the cache SEQUENCE over model: per-device reads drop
+                # 16x and the softmax/PV reductions over the sharded score
+                # row are KB-scale (vs all-reducing f32 scores when sharding
+                # head_dim: measured 102 GB/dev ICI).
+                if shape.seq_len % mp == 0:
+                    crules["cache_seq"] = ("model",)
+                elif cfg.head_dim % mp == 0:
+                    crules["cache_hd"] = ("model",)
+            crules = crules or None
+            cshard = tree_shardings(mesh, model.cache_axes(), cspecs,
+                                    rules=crules)
+            base_step = ts.make_serve_decode(model)
+            if serve_wbits:
+                def step(qparams, cache, batch):
+                    params = Q.dequantize_tree(qparams, pspecs, serve_wbits)
+                    return base_step(params, cache, batch)
+                fn = jax.jit(step, in_shardings=(pshard, cshard, bshard),
+                             donate_argnums=(1,))
+                lowered = fn.lower(qspecs, cspecs, specs)
+            else:
+                fn = jax.jit(base_step,
+                             in_shardings=(pshard, cshard, bshard),
+                             donate_argnums=(1,))
+                lowered = fn.lower(pspecs, cspecs, specs)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = _cost_dict(compiled)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    counts = analyze_hlo(compiled.as_text(), n_dev)
+    t_analyze = time.time() - t0
+    rep = RooflineReport.build(
+        arch=arch, shape=shape_name, mesh=mesh_kind, n_devices=n_dev,
+        counts=counts, model_flops=model_flops_for(cfg, shape),
+        xla_cost=cost, memory_stats=mem)
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "ok", "fsdp": bool(fsdp),
+           "accum_steps": accum_steps if shape.kind == "train" else None,
+           "lower_s": round(t_lower, 2),
+           "compile_s": round(t_compile, 2), "analyze_s": round(t_analyze, 2),
+           "memory_analysis": {
+               "argument_bytes": mem.argument_size_in_bytes,
+               "output_bytes": mem.output_size_in_bytes,
+               "temp_bytes": mem.temp_size_in_bytes,
+               "alias_bytes": mem.alias_size_in_bytes,
+           },
+           "cost_analysis": {k: cost.get(k) for k in
+                             ("flops", "bytes accessed") if k in cost},
+           "roofline": json.loads(rep.to_json())}
+    if verbose:
+        print("  " + rep.summary_row())
+        print(f"  mem/device: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--rules", default=None,
+                    help="JSON logical-rule overrides, e.g. "
+                         "'{\"mlp\": null}' (perf hillclimbing)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--accum", type=int, default=2,
+                    help="grad-accumulation microbatches for train shapes")
+    ap.add_argument("--bf16-partials", action="store_true",
+                    help="perf lever: bf16 cross-shard partial sums")
+    ap.add_argument("--moe-group", type=int, default=0,
+                    help="perf lever: MoE token-group size")
+    ap.add_argument("--moe-dispatch", default="",
+                    choices=["", "einsum", "gather"],
+                    help="perf lever: MoE dispatch algorithm")
+    ap.add_argument("--serve-wbits", type=int, default=0, choices=[0, 4, 8],
+                    help="perf lever: weight-quantized serving (decode)")
+    ap.add_argument("--kv-cache-int8", action="store_true",
+                    help="perf lever: int8 KV cache (decode)")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    rules = json.loads(args.rules) if args.rules else None
+    if rules:
+        rules = {k: (tuple(v) if isinstance(v, list) else v)
+                 for k, v in rules.items()}
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}_{shape}_{mesh_kind}" + \
+                    (f"_{args.tag}" if args.tag else "")
+                print(f"[dryrun] {tag}")
+                try:
+                    res = run_cell(arch, shape, mesh_kind, rules,
+                                   accum_steps=args.accum,
+                                   bf16_partials=args.bf16_partials,
+                                   moe_group=args.moe_group,
+                                   moe_dispatch=args.moe_dispatch,
+                                   serve_wbits=args.serve_wbits,
+                                   kv_cache_int8=args.kv_cache_int8)
+                except Exception as e:
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                if res["status"] == "skip":
+                    print(f"  SKIP: {res['reason']}")
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=1)
+    print(f"[dryrun] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

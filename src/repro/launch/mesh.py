@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state. Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods x 256 =
+512 chips (pod, data, model); the pod axis is an outer data-parallel axis —
+gradients reduce over ("pod", "data"), parameters shard over "model".
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(n_devices: Optional[int] = None, model_parallel: int = 1,
+                  axes: Tuple[str, ...] = ("data", "model")):
+    """Elastic mesh: build the best (data, model) grid for whatever devices
+    are alive — used by the trainer after restarts on fewer/more hosts."""
+    n = n_devices or len(jax.devices())
+    assert n % model_parallel == 0, (n, model_parallel)
+    return jax.make_mesh((n // model_parallel, model_parallel), axes)

@@ -1,0 +1,171 @@
+"""Encoder-decoder transformer (seamless-m4t). The audio frontend is a stub:
+``input_specs`` supplies precomputed frame embeddings (B, T_enc, D).
+
+Encoder: bidirectional self-attention stack. Decoder: causal self-attention +
+cross-attention. Serving: ``encode`` caches encoder output + per-layer cross
+K/V once; ``decode_step`` consumes a self-attn KV cache.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+
+def init_enc_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": cm.init_attn(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+            "ffn": cm.init_mlp(k2, cfg.d_model, cfg.d_ff)}
+
+
+def init_dec_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": cm.init_attn(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim),
+            "norm_x": jnp.ones((cfg.d_model,), jnp.float32),
+            "xattn": cm.init_attn(k2, cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+            "ffn": cm.init_mlp(k3, cfg.d_model, cfg.d_ff)}
+
+
+ENC_AXES = {"norm1": ("embed",), "attn": dict(cm.ATTN_AXES),
+            "norm2": ("embed",), "ffn": dict(cm.MLP_AXES)}
+DEC_AXES = {"norm1": ("embed",), "attn": dict(cm.ATTN_AXES),
+            "norm_x": ("embed",), "xattn": dict(cm.ATTN_AXES),
+            "norm2": ("embed",), "ffn": dict(cm.MLP_AXES)}
+
+
+def init_lm(key, cfg):
+    ke, k1, k2, kh = jax.random.split(key, 4)
+    D, V = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": cm.normal_init(ke, (V, D), 1.0 / math.sqrt(D)),
+        "enc": jax.vmap(partial(init_enc_block, cfg=cfg))(
+            jax.random.split(k1, cfg.n_layers)),
+        "dec": jax.vmap(partial(init_dec_block, cfg=cfg))(
+            jax.random.split(k2, cfg.n_dec_layers)),
+        "enc_norm": jnp.ones((D,), jnp.float32),
+        "final_norm": jnp.ones((D,), jnp.float32),
+        "lm_head": cm.normal_init(kh, (D, V), 1.0 / math.sqrt(D)),
+    }
+
+
+def lm_axes(cfg):
+    return {"embed": ("vocab", "embed"),
+            "enc": tf._stacked(ENC_AXES, 1),
+            "dec": tf._stacked(DEC_AXES, 1),
+            "enc_norm": ("embed",), "final_norm": ("embed",),
+            "lm_head": ("embed", "vocab")}
+
+
+def encode(params, cfg, frames):
+    """frames: (B, T_enc, D) stub audio embeddings -> encoder output."""
+    x = shard(frames.astype(jnp.bfloat16), "batch", "seq", "embed")
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+
+    def body(h, bp):
+        hn = cm.rms_norm(h, bp["norm1"], cfg.norm_eps)
+        q, k, v = cm.attn_qkv(bp["attn"], hn, positions, cfg.rope_theta)
+        o = cm.gqa_attention(q, k, v, causal=False)
+        h = h + cm.attn_out(bp["attn"], o)
+        hn = cm.rms_norm(h, bp["norm2"], cfg.norm_eps)
+        return h + cm.mlp(bp["ffn"], hn), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"])
+    return cm.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(bp, cfg, h, enc_out, positions, causal=True,
+               self_kv=None, cur=None):
+    hn = cm.rms_norm(h, bp["norm1"], cfg.norm_eps)
+    if self_kv is None:
+        q, k, v = cm.attn_qkv(bp["attn"], hn, positions, cfg.rope_theta)
+        o = cm.gqa_attention(q, k, v, causal=causal)
+        new_kv = None
+    else:
+        pos = jnp.full((h.shape[0], 1), cur, jnp.int32)
+        q, k, v = cm.attn_qkv(bp["attn"], hn, pos, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(
+            self_kv["k"], k.astype(self_kv["k"].dtype), (0, cur, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            self_kv["v"], v.astype(self_kv["v"].dtype), (0, cur, 0, 0))
+        o = cm.gqa_attention(q, ck, cv, q_offset=cur, kv_valid=cur + 1,
+                             chunk_q=1 << 30, chunk_k=1 << 30)
+        new_kv = {"k": ck, "v": cv}
+    h = h + cm.attn_out(bp["attn"], o)
+    # cross attention
+    hn = cm.rms_norm(h, bp["norm_x"], cfg.norm_eps)
+    zero_pos = jnp.zeros_like(hn[..., 0], dtype=jnp.int32)
+    qx = jnp.einsum("btd,dhk->bthk", hn, bp["xattn"]["wq"],
+                    preferred_element_type=jnp.float32).astype(hn.dtype)
+    kx = jnp.einsum("btd,dhk->bthk", enc_out, bp["xattn"]["wk"],
+                    preferred_element_type=jnp.float32).astype(hn.dtype)
+    vx = jnp.einsum("btd,dhk->bthk", enc_out, bp["xattn"]["wv"],
+                    preferred_element_type=jnp.float32).astype(hn.dtype)
+    ox = cm.gqa_attention(qx, kx, vx, causal=False)
+    h = h + cm.attn_out(bp["xattn"], ox)
+    hn = cm.rms_norm(h, bp["norm2"], cfg.norm_eps)
+    return h + cm.mlp(bp["ffn"], hn), new_kv
+
+
+def forward(params, cfg, frames, dec_tokens, remat: bool = True):
+    """Training: encode frames, teacher-forced decode. Returns dec logits."""
+    enc_out = encode(params, cfg, frames)
+    x = tf.embed_tokens(params, cfg, dec_tokens)
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+
+    def body(h, bp):
+        h, _ = _dec_block(bp, cfg, h, enc_out, positions)
+        return h, None
+    body_ = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_, x, params["dec"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return tf.logits_head(params, cfg, x)
+
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int):
+    L = cfg.n_dec_layers
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "self": {"k": jnp.zeros((L, batch, max_len, KV, hd), jnp.bfloat16),
+                 "v": jnp.zeros((L, batch, max_len, KV, hd), jnp.bfloat16)},
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), jnp.bfloat16),
+        "cur": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg):
+    return {"self": {"k": ("stack", "cache_batch", "cache_seq", "kv_heads", "cache_hd"),
+                     "v": ("stack", "cache_batch", "cache_seq", "kv_heads", "cache_hd")},
+            "enc_out": ("cache_batch", "seq", "embed"),
+            "cur": ()}
+
+
+def decode_step(params, cfg, cache, token):
+    x = tf.embed_tokens(params, cfg, token)
+    cur = cache["cur"]
+    enc_out = cache["enc_out"]
+
+    def body(h, xs):
+        bp, kv = xs
+        h, new_kv = _dec_block(bp, cfg, h, enc_out, None,
+                               self_kv=kv, cur=cur)
+        return h, new_kv
+    x, new_kv = jax.lax.scan(body, x, (params["dec"], cache["self"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return tf.logits_head(params, cfg, x), \
+        {"self": new_kv, "enc_out": enc_out, "cur": cur + 1}

@@ -1,0 +1,157 @@
+"""Mamba (S6 selective state space) block — chunked parallel training form,
+single-step recurrence for decode.
+
+Training uses a scan over time-chunks; within a chunk the diagonal recurrence
+h_t = a_t * h_{t-1} + b_t is solved with ``jax.lax.associative_scan`` (log-depth),
+so peak memory is (B, chunk, d_inner, N) with d_inner sharded on the model
+axis (Jamba-style TP). This is the TPU-native adaptation: no CUDA selective
+scan kernel — MXU-friendly matmuls outside, associative scan inside.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+
+
+def init_mamba(key, cfg):
+    D, di, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_d_state
+    dt_rank = max(1, math.ceil(D / 16))
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(D)
+    # S4D-real initialization of A
+    A = np.tile(np.arange(1, N + 1, dtype=np.float32)[None, :], (di, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (D, 2 * di)) * s).astype(jnp.bfloat16),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_d_conv, di)) * 0.1).astype(jnp.bfloat16),
+        "x_proj": (jax.random.normal(ks[2], (di, dt_rank + 2 * N))
+                   / math.sqrt(di)).astype(jnp.bfloat16),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, di))
+                    / math.sqrt(dt_rank)).astype(jnp.float32),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.asarray(A)),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, D))
+                     / math.sqrt(di)).astype(jnp.bfloat16),
+    }
+
+
+def mamba_axes():
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "x_proj": ("ssm_inner", None),
+        "dt_proj": (None, "ssm_inner"),
+        "dt_bias": ("ssm_inner",),
+        "A_log": ("ssm_inner", "ssm_state"),
+        "D_skip": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _ssm_inputs(p, cfg, xz):
+    """Shared projections. xz: (B, T, 2*di) -> (x_conv_in, z)."""
+    di = cfg.ssm_d_inner
+    x, z = xz[..., :di], xz[..., di:]
+    return x, z
+
+
+def _gates(p, cfg, x):
+    """x: (B, T, di) post-conv. Returns dt (f32), B, C (bf16)."""
+    N = cfg.ssm_d_state
+    dbc = jnp.dot(x, p["x_proj"], preferred_element_type=jnp.float32)
+    dt_rank = dbc.shape[-1] - 2 * N
+    dt, Bm, Cm = (dbc[..., :dt_rank], dbc[..., dt_rank:dt_rank + N],
+                  dbc[..., dt_rank + N:])
+    dt = jax.nn.softplus(jnp.dot(dt.astype(jnp.float32), p["dt_proj"])
+                         + p["dt_bias"])                       # (B,T,di)
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _causal_conv(p, cfg, x, init_state=None):
+    """Depthwise causal conv over time. x: (B,T,di)."""
+    K = cfg.ssm_d_conv
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(K))
+    return jax.nn.silu(out), xp[:, -(K - 1):]
+
+
+def mamba_fwd(p, cfg, h, return_state: bool = False):
+    """Training forward. h: (B, T, D) -> (B, T, D) [, {'h','conv'} states]."""
+    B, T, D = h.shape
+    di, N = cfg.ssm_d_inner, cfg.ssm_d_state
+    chunk = min(cfg.ssm_chunk, T)
+    nch = -(-T // chunk)
+    pad = nch * chunk - T
+
+    xz = jnp.dot(h, p["in_proj"], preferred_element_type=jnp.float32).astype(h.dtype)
+    xz = shard(xz, "batch", "seq", "ssm_inner")
+    x, z = _ssm_inputs(p, cfg, xz)
+    x, conv_tail = _causal_conv(p, cfg, x)
+    dt, Bm, Cm = _gates(p, cfg, x)
+
+    A = -jnp.exp(p["A_log"])                                  # (di, N)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(t):
+        return t.reshape(B, nch, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    xc, dtc, Bc, Cc = map(to_chunks, (x, dt, Bm, Cm))
+
+    def chunk_step(hstate, xs):
+        xk, dtk, Bk, Ck = xs                                  # (B,chunk,...)
+        a = jnp.exp(dtk[..., None] * A)                       # (B,c,di,N)
+        b = (dtk * xk.astype(jnp.float32))[..., None] * Bk[..., None, :]
+        def combine(l, r):
+            return (l[0] * r[0], l[1] * r[0] + r[1])
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = a_cum * hstate[:, None] + b_cum                  # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Ck)
+        y = y + p["D_skip"] * xk.astype(jnp.float32)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_last, yc = jax.lax.scan(chunk_step, h0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3).reshape(B, nch * chunk, di)[:, :T]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+    y = shard(y, "batch", "seq", "ssm_inner")
+    out = jnp.dot(y, p["out_proj"], preferred_element_type=jnp.float32).astype(h.dtype)
+    out = shard(out, "batch", "seq", "embed")
+    if return_state:
+        # NOTE: with right-padding, h_last includes pad steps; padded dt==0
+        # makes a==1, b==0 there, so the state passes through unchanged.
+        return out, {"h": h_last, "conv": conv_tail}
+    return out
+
+
+def mamba_step(p, cfg, h, state):
+    """Decode step. h: (B, 1, D); state = {'h': (B,di,N), 'conv': (B,K-1,di)}."""
+    B = h.shape[0]
+    di, N = cfg.ssm_d_inner, cfg.ssm_d_state
+    xz = jnp.dot(h, p["in_proj"], preferred_element_type=jnp.float32).astype(h.dtype)
+    x, z = _ssm_inputs(p, cfg, xz)
+    x, new_conv = _causal_conv(p, cfg, x, init_state=state["conv"])
+    dt, Bm, Cm = _gates(p, cfg, x)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)                        # (B,di,N)
+    b = (dt[:, 0] * x[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    hs = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", hs, Cm[:, 0])
+    y = y + p["D_skip"] * x[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(h.dtype)
+    out = jnp.dot(y[:, None], p["out_proj"],
+                  preferred_element_type=jnp.float32).astype(h.dtype)
+    return out, {"h": hs, "conv": new_conv.astype(state["conv"].dtype)}

@@ -1,0 +1,282 @@
+"""Simple Recurrent Unit (SRU) speech model — the paper's experimental model.
+
+Architecture (paper Table 4 / Fig 6a): 4 Bi-SRU layers (n=550/direction) with
+3 projection layers (p=256) between them, FC to 1904 phone-state posteriors.
+Input: FBANK features m=23.
+
+SRU cell (paper Eq. 2):
+    u_t      = W   x_t                     (the only MxV — time-parallel)
+    f_t      = sigma(W_f x_t + v_f . c_{t-1} + b_f)
+    r_t      = sigma(W_r x_t + v_r . c_{t-1} + b_r)
+    c_t      = f_t . c_{t-1} + (1 - f_t) . u_t
+    h_t      = r_t . c_t + (1 - r_t) . x_t     (highway only when m == n)
+
+Quantization boundary (paper §4.1): only the MxV weight matrices and their
+input activations carry searchable precision; v_f, v_r and biases stay 16-bit
+fixed point. The model exposes exactly 8 quantizable layers
+(L0, Pr1, L1, Pr2, L2, Pr3, L3, FC) — a 16-variable MOHAQ genome.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as Q
+
+LAYER_NAMES = ("L0", "Pr1", "L1", "Pr2", "L2", "Pr3", "L3", "FC")
+
+
+def layer_names_for(n_sru_layers: int):
+    names = ["L0"]
+    for i in range(1, n_sru_layers):
+        names += [f"Pr{i}", f"L{i}"]
+    return tuple(names + ["FC"])
+
+
+@dataclass(frozen=True)
+class SRUModelConfig:
+    name: str = "sru_timit"
+    input_dim: int = 23
+    hidden: int = 550          # per direction
+    proj: int = 256
+    n_sru_layers: int = 4
+    n_outputs: int = 1904
+    family: str = "sru"
+
+    @property
+    def bi_out(self) -> int:
+        return 2 * self.hidden
+
+    def layer_input_dims(self) -> Dict[str, int]:
+        d = {"L0": self.input_dim, "Pr1": self.bi_out, "FC": self.bi_out}
+        for i in range(1, self.n_sru_layers):
+            d[f"L{i}"] = self.proj
+            if i >= 2:
+                d[f"Pr{i}"] = self.bi_out
+        return d
+
+    def layer_names(self):
+        return layer_names_for(self.n_sru_layers)
+
+    def layer_weight_counts(self) -> Dict[str, int]:
+        """MxV matrix weights per layer (== MACs per frame), paper Table 4."""
+        c = {}
+        for name in self.layer_names():
+            m = self.layer_input_dims()[name]
+            if name.startswith("L"):
+                c[name] = 2 * 3 * self.hidden * m          # Bi-SRU: 2 dirs x 3 mats
+            elif name.startswith("Pr"):
+                c[name] = self.bi_out * self.proj
+            else:
+                c[name] = self.bi_out * self.n_outputs
+        return c
+
+    def vector_weight_count(self) -> int:
+        """v_f, v_r + biases per direction per SRU layer (16-bit, unsearched)."""
+        return self.n_sru_layers * 2 * 4 * self.hidden
+
+    def total_weights(self) -> int:
+        return sum(self.layer_weight_counts().values()) + self.vector_weight_count()
+
+    def model_bytes(self, layer_bits: Optional[Dict[str, int]] = None,
+                    base_bits: int = 32) -> float:
+        if layer_bits is None:
+            return self.total_weights() * base_bits / 8
+        bits = Q.compressed_bits(self.layer_weight_counts(), layer_bits,
+                                 self.vector_weight_count())
+        return bits / 8
+
+
+# ---------------------------------------------------------------- params
+
+def init_params(key, cfg: SRUModelConfig):
+    p: Dict = {}
+    dims = cfg.layer_input_dims()
+    names = cfg.layer_names()
+    keys = jax.random.split(key, len(names))
+    for k, name in zip(keys, names):
+        m = dims[name]
+        if name.startswith("L"):
+            n = cfg.hidden
+            kd = jax.random.split(k, 2)
+            def one_dir(kk):
+                k1, k2, k3 = jax.random.split(kk, 3)
+                s = 1.0 / math.sqrt(m)
+                return {
+                    "W": jax.random.normal(k1, (m, 3 * n), jnp.float32) * s,
+                    "v": jax.random.normal(k2, (2, n), jnp.float32) * 0.1,
+                    "b": jnp.zeros((2, n), jnp.float32),
+                }
+            p[name] = {"fwd": one_dir(kd[0]), "bwd": one_dir(kd[1])}
+        elif name.startswith("Pr"):
+            s = 1.0 / math.sqrt(m)
+            p[name] = {"W": jax.random.normal(k, (m, cfg.proj), jnp.float32) * s}
+        else:
+            s = 1.0 / math.sqrt(m)
+            k1, _ = jax.random.split(k)
+            p[name] = {"W": jax.random.normal(k1, (m, cfg.n_outputs)) * s,
+                       "b": jnp.zeros((cfg.n_outputs,), jnp.float32)}
+    return p
+
+
+# ---------------------------------------------------------------- forward
+
+def _sru_dir(dp, x, *, reverse: bool, quant16_vectors: bool,
+             use_kernel: bool = False):
+    """One SRU direction. x: (B, T, m) -> (B, T, n)."""
+    n = dp["v"].shape[1]
+    v, b = dp["v"], dp["b"]
+    if quant16_vectors:
+        v = Q.fixed_point_16(v)
+        b = Q.fixed_point_16(b)
+    u = jnp.einsum("btm,mh->bth", x, dp["W"])                 # (B,T,3n)
+    uw, uf, ur = u[..., :n], u[..., n:2 * n], u[..., 2 * n:]
+    if reverse:
+        uw, uf, ur = uw[:, ::-1], uf[:, ::-1], ur[:, ::-1]
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        h = kops.sru_scan(uw, uf, ur, v[0], v[1], b[0], b[1])
+    else:
+        def step(c, ufr):
+            uw_t, uf_t, ur_t = ufr
+            f = jax.nn.sigmoid(uf_t + v[0] * c + b[0])
+            r = jax.nn.sigmoid(ur_t + v[1] * c + b[1])
+            c_new = f * c + (1.0 - f) * uw_t
+            h_t = r * c_new                                  # highway added below
+            return c_new, (h_t, r)
+        c0 = jnp.zeros((x.shape[0], n), jnp.float32)
+        _, (h, r) = jax.lax.scan(
+            step, c0, (uw.transpose(1, 0, 2), uf.transpose(1, 0, 2),
+                       ur.transpose(1, 0, 2)))
+        h = h.transpose(1, 0, 2)
+        r = r.transpose(1, 0, 2)
+        if x.shape[-1] == n:                                  # highway skip
+            xx = x[:, ::-1] if reverse else x
+            h = h + (1.0 - r) * xx
+    if reverse:
+        h = h[:, ::-1]
+    return h
+
+
+def quant_triples_for(alloc, wclips: Dict[Tuple[str, int], float],
+                      act_ranges: Dict[str, float],
+                      wranges: Dict[str, float]):
+    """Build the dynamic quantization-parameter pytree for ``forward(qp=)``:
+    {name: 6 floats} — scale/lo/hi for the weight grid and activation grid.
+    Computed in numpy per candidate; the jitted forward never recompiles."""
+    qp = {}
+    for name, (wb, ab) in alloc.items():
+        wtrip = Q.quant_triple(
+            wb, wclips[(name, wb)] if wb != 16 else wranges[name])
+        atrip = Q.quant_triple(ab, act_ranges[name])
+        qp[name] = tuple(np.float32(v) for v in (wtrip + atrip))
+    return qp
+
+
+def weight_ranges(params, cfg: SRUModelConfig) -> Dict[str, float]:
+    out = {}
+    for name in cfg.layer_names():
+        if name.startswith("L"):
+            w = max(float(jnp.max(jnp.abs(params[name]["fwd"]["W"]))),
+                    float(jnp.max(jnp.abs(params[name]["bwd"]["W"]))))
+        else:
+            w = float(jnp.max(jnp.abs(params[name]["W"])))
+        out[name] = w
+    return out
+
+
+def forward(params, cfg: SRUModelConfig, feats,
+            qspec: Optional[Dict[str, Tuple[int, int]]] = None,
+            wclips: Optional[Dict[str, float]] = None,
+            act_ranges: Optional[Dict[str, float]] = None,
+            calibrator: Optional[Q.ActRangeCalibrator] = None,
+            qp: Optional[Dict[str, tuple]] = None,
+            use_kernel: bool = False):
+    """feats: (B, T, input_dim) -> logits (B, T, n_outputs).
+
+    Two quantization entry points:
+    - qspec[name] = (w_bits, a_bits): the paper's mixed-precision path with
+      static bits (MMSE clips computed on the fly if missing);
+    - qp[name] = (w_scale, w_lo, w_hi, a_scale, a_lo, a_hi): dynamic grids
+      (one compilation serves every allocation — used by the GA search).
+    MxV inputs fake-quantized against calibrated ranges, MxV weights against
+    MMSE clips, recurrent vectors/biases at 16-bit fixed point. STE
+    everywhere, so the same path retrains beacons (binary-connect).
+    """
+    quantized = qspec is not None or qp is not None
+
+    def prep(name, x, p_w):
+        w = p_w
+        if calibrator is not None:
+            calibrator.observe(name, x)
+        if qp is not None and name in qp:
+            ws, wl, wh, as_, al, ah = qp[name]
+            w = Q.fake_quant_triple(w, ws, wl, wh)
+            x = Q.fake_quant_triple(x, as_, al, ah)
+        elif qspec is not None and name in qspec:
+            wb, ab = qspec[name]
+            clip = (wclips or {}).get(name)
+            if clip is None and wb != 16:
+                clip = Q.mmse_clip(np.asarray(w), wb)
+            w = Q.ste_quantize_weight(w, wb, clip)
+            rng = (act_ranges or {}).get(name)
+            if rng is None:
+                rng = float(jnp.max(jnp.abs(x)))
+            x = Q.quantize_activation(x, ab, rng)
+        return x, w
+
+    x = feats
+    for i in range(cfg.n_sru_layers):
+        name = f"L{i}"
+        lp = params[name]
+        xq_f, wf = prep(name, x, lp["fwd"]["W"])
+        _, wb_ = prep(name, x, lp["bwd"]["W"])
+        fw = _sru_dir({**lp["fwd"], "W": wf}, xq_f, reverse=False,
+                      quant16_vectors=quantized, use_kernel=use_kernel)
+        bw = _sru_dir({**lp["bwd"], "W": wb_}, xq_f, reverse=True,
+                      quant16_vectors=quantized, use_kernel=use_kernel)
+        x = jnp.concatenate([fw, bw], axis=-1)                # (B,T,2n)
+        if i < cfg.n_sru_layers - 1:
+            pname = f"Pr{i + 1}"
+            xq, w = prep(pname, x, params[pname]["W"])
+            x = jnp.einsum("btm,mp->btp", xq, w)
+    xq, w = prep("FC", x, params["FC"]["W"])
+    logits = jnp.einsum("btm,mo->bto", xq, w) + params["FC"]["b"]
+    return logits
+
+
+def calibrate(params, cfg: SRUModelConfig, feats_batches) -> Dict[str, float]:
+    """Expected activation ranges = median of per-sequence max-abs."""
+    cal = Q.ActRangeCalibrator()
+    for feats in feats_batches:
+        forward(params, cfg, feats, calibrator=cal)
+    return cal.expected_ranges()
+
+
+def weight_clips(params, cfg: SRUModelConfig,
+                 bits_by_layer: Dict[str, int]) -> Dict[str, float]:
+    """MMSE clip per layer at a given bit-width (weights of both directions
+    pooled for Bi-SRU layers)."""
+    clips = {}
+    for name, bits in bits_by_layer.items():
+        if bits == 16:
+            continue
+        if name.startswith("L"):
+            w = np.concatenate([np.asarray(params[name]["fwd"]["W"]).ravel(),
+                                np.asarray(params[name]["bwd"]["W"]).ravel()])
+        else:
+            w = np.asarray(params[name]["W"]).ravel()
+        clips[name] = Q.mmse_clip(w, bits)
+    return clips
+
+
+def frame_error_rate(params, cfg: SRUModelConfig, feats, labels, **fw_kwargs):
+    logits = forward(params, cfg, feats, **fw_kwargs)
+    pred = jnp.argmax(logits, axis=-1)
+    return float(jnp.mean((pred != labels).astype(jnp.float32)) * 100.0)

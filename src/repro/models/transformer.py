@@ -1,0 +1,343 @@
+"""Decoder-only LM core (dense / MoE / hybrid / VLM) with scan-over-layers.
+
+Layers are stacked on a leading axis and iterated with ``jax.lax.scan`` —
+this keeps the HLO one-layer-sized (essential for fast 512-way SPMD compiles)
+and is the idiom MaxText uses in production. Hybrid (Jamba) stacks are
+period-grouped: scan over G groups of (P-1 mamba + 1 attention) blocks.
+
+Serving uses a stacked KV cache scanned alongside the layer params.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import common as cm
+from repro.models import mamba as mb
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ blocks
+
+def init_block(key, cfg: ArchConfig, kind: str):
+    """One transformer block: mixer (attn|mamba) + ffn (mlp|moe) + norms."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+         "norm2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if kind == "attn":
+        p["attn"] = cm.init_attn(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim)
+    elif kind == "mamba":
+        p["mamba"] = mb.init_mamba(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.n_experts:
+        p["ffn"] = cm.init_moe(k2, cfg.d_model, cfg.moe_ff,
+                               cfg.n_experts, cfg.n_shared_experts)
+    else:
+        p["ffn"] = cm.init_mlp(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def block_axes(cfg: ArchConfig, kind: str):
+    p = {"norm1": ("embed",), "norm2": ("embed",)}
+    if kind == "attn":
+        p["attn"] = dict(cm.ATTN_AXES)
+    else:
+        p["mamba"] = mb.mamba_axes()
+    p["ffn"] = (cm.moe_axes(cfg.n_shared_experts) if cfg.n_experts
+                else dict(cm.MLP_AXES))
+    return p
+
+
+def apply_ffn(p, cfg: ArchConfig, x):
+    if cfg.n_experts:
+        return cm.moe_ffn(p, x, top_k=cfg.top_k)
+    return cm.mlp(p, x)
+
+
+def attn_block_fwd(p, cfg: ArchConfig, x, positions):
+    h = cm.rms_norm(x, p["norm1"], cfg.norm_eps)
+    q, k, v = cm.attn_qkv(p["attn"], h, positions, cfg.rope_theta)
+    o = cm.gqa_attention(q, k, v, causal=True)
+    x = x + cm.attn_out(p["attn"], o)
+    h = cm.rms_norm(x, p["norm2"], cfg.norm_eps)
+    return x + apply_ffn(p["ffn"], cfg, h)
+
+
+# Perf lever (EXPERIMENTS.md §Perf): store the KV cache in int8. Decode is
+# KV-cache-read bound (measured: ~1 TB/step/device on deepseek decode_32k),
+# so this halves the dominant roofline term. Fixed symmetric scale here; a
+# production deployment calibrates per layer like the paper's activation
+# ranges (§4.1).
+KV_CACHE_DTYPE = jnp.bfloat16
+KV_CACHE_SCALE = 1.0 / 16.0
+
+
+def _cache_store(val, cache_dtype):
+    if cache_dtype == jnp.int8:
+        return jnp.clip(jnp.round(val.astype(jnp.float32) / KV_CACHE_SCALE),
+                        -128, 127).astype(jnp.int8)
+    return val.astype(cache_dtype)
+
+
+def _cache_load(val, like_dtype):
+    if val.dtype == jnp.int8:
+        return (val.astype(jnp.float32) * KV_CACHE_SCALE).astype(like_dtype)
+    return val
+
+
+def attn_block_decode(p, cfg: ArchConfig, x, cache_kv, cur):
+    """x: (B,1,D). cache_kv = {'k': (B,S,KV,d), 'v': ...}. Returns new cache."""
+    h = cm.rms_norm(x, p["norm1"], cfg.norm_eps)
+    pos = jnp.full((x.shape[0], 1), cur, jnp.int32)
+    q, k, v = cm.attn_qkv(p["attn"], h, pos, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(
+        cache_kv["k"], _cache_store(k, cache_kv["k"].dtype), (0, cur, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache_kv["v"], _cache_store(v, cache_kv["v"].dtype), (0, cur, 0, 0))
+    # dense decode attention: with the cache sequence dim sharded over the
+    # model axis (launch/dryrun cache rules) the score row is sharded too,
+    # and the softmax/PV reductions over it are KB-scale psums
+    o = cm.gqa_attention(q, _cache_load(ck, q.dtype), _cache_load(cv, q.dtype),
+                         q_offset=cur, kv_valid=cur + 1,
+                         chunk_q=1 << 30, chunk_k=1 << 30)
+    x = x + cm.attn_out(p["attn"], o)
+    h = cm.rms_norm(x, p["norm2"], cfg.norm_eps)
+    return x + apply_ffn(p["ffn"], cfg, h), {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------------ stacks
+
+def _vmap_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    ke, kl, kh, ka = jax.random.split(key, 4)
+    D, V = cfg.d_model, cfg.padded_vocab
+    p: Params = {
+        "embed": cm.normal_init(ke, (V, D), 1.0 / math.sqrt(D)),
+        "final_norm": jnp.ones((D,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.normal_init(kh, (D, V), 1.0 / math.sqrt(D))
+    if cfg.family == "hybrid":
+        P_, G = cfg.attn_period, cfg.n_layers // cfg.attn_period
+        p["mamba_blocks"] = _vmap_init(
+            lambda k: _vmap_init(partial(init_block, cfg=cfg, kind="mamba"),
+                                 k, P_ - 1), kl, G)
+        p["attn_blocks"] = _vmap_init(
+            partial(init_block, cfg=cfg, kind="attn"), ka, G)
+    else:
+        p["blocks"] = _vmap_init(
+            partial(init_block, cfg=cfg, kind="attn"), kl, cfg.n_layers)
+    return p
+
+
+def _stacked(axes_tree, extra=1):
+    return jax.tree.map(lambda a: ("stack",) * extra + a, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            e is None or isinstance(e, str) for e in x))
+
+
+def lm_axes(cfg: ArchConfig):
+    ax: Dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("embed", "vocab")
+    if cfg.family == "hybrid":
+        ax["mamba_blocks"] = _stacked(block_axes(cfg, "mamba"), 2)
+        ax["attn_blocks"] = _stacked(block_axes(cfg, "attn"), 1)
+    else:
+        ax["blocks"] = _stacked(block_axes(cfg, "attn"), 1)
+    return ax
+
+
+def embed_tokens(p, cfg: ArchConfig, tokens, extra_embeds=None):
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return shard(x, "batch", "seq", "embed")
+
+
+def logits_head(p, cfg: ArchConfig, x):
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return shard(logits.astype(jnp.bfloat16), "batch", "seq", "vocab")
+
+
+def forward(params, cfg: ArchConfig, tokens, extra_embeds=None,
+            remat: bool = True):
+    """Full training/prefill forward. Returns (B, T_total, V) logits."""
+    x = embed_tokens(params, cfg, tokens, extra_embeds)
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+
+    if cfg.family == "hybrid":
+        def group(h, gp):
+            def mamba_body(h2, bp):
+                hin = h2
+                hn = cm.rms_norm(h2, bp["norm1"], cfg.norm_eps)
+                h2 = hin + mb.mamba_fwd(bp["mamba"], cfg, hn)
+                hn = cm.rms_norm(h2, bp["norm2"], cfg.norm_eps)
+                return h2 + apply_ffn(bp["ffn"], cfg, hn), None
+            body = jax.checkpoint(mamba_body) if remat else mamba_body
+            h, _ = jax.lax.scan(body, h, gp["mamba_blocks"])
+            ab = jax.checkpoint(partial(attn_block_fwd, cfg=cfg)) if remat \
+                else partial(attn_block_fwd, cfg=cfg)
+            h = ab(gp["attn_blocks"], x=h, positions=positions)
+            return h, None
+        x, _ = jax.lax.scan(
+            group, x,
+            {"mamba_blocks": params["mamba_blocks"],
+             "attn_blocks": params["attn_blocks"]})
+    else:
+        def body(h, bp):
+            return attn_block_fwd(bp, cfg, h, positions), None
+        body_ = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_, x, params["blocks"])
+
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_head(params, cfg, x)
+
+
+# ------------------------------------------------------------------ serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    cdt = KV_CACHE_DTYPE
+    if cfg.family == "hybrid":
+        P_, G = cfg.attn_period, cfg.n_layers // cfg.attn_period
+        di, N = cfg.ssm_d_inner, cfg.ssm_d_state
+        return {
+            "attn": jax.tree.map(lambda _: None, ()) or {
+                "k": jnp.zeros((G, batch, max_len, KV, hd), cdt),
+                "v": jnp.zeros((G, batch, max_len, KV, hd), cdt)},
+            "ssm": {
+                "h": jnp.zeros((G, P_ - 1, batch, di, N), jnp.float32),
+                "conv": jnp.zeros((G, P_ - 1, batch, cfg.ssm_d_conv - 1, di),
+                                  jnp.bfloat16)},
+            "cur": jnp.zeros((), jnp.int32),
+        }
+    L = cfg.n_layers
+    return {
+        "attn": {"k": jnp.zeros((L, batch, max_len, KV, hd), cdt),
+                 "v": jnp.zeros((L, batch, max_len, KV, hd), cdt)},
+        "cur": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ArchConfig):
+    kvax = {"k": ("stack", "cache_batch", "cache_seq", "kv_heads", "cache_hd"),
+            "v": ("stack", "cache_batch", "cache_seq", "kv_heads", "cache_hd")}
+    if cfg.family == "hybrid":
+        return {"attn": kvax,
+                "ssm": {"h": ("stack", "stack", "cache_batch", "ssm_inner", None),
+                        "conv": ("stack", "stack", "cache_batch", None, "ssm_inner")},
+                "cur": ()}
+    return {"attn": kvax, "cur": ()}
+
+
+def decode_step(params, cfg: ArchConfig, cache, token):
+    """One decode step. token: (B, 1) int32. Returns (logits, new_cache)."""
+    x = embed_tokens(params, cfg, token)
+    cur = cache["cur"]
+
+    if cfg.family == "hybrid":
+        def group(h, xs):
+            gp, ckv, cssm = xs
+            def mamba_body(h2, xs2):
+                bp, st = xs2
+                hn = cm.rms_norm(h2, bp["norm1"], cfg.norm_eps)
+                y, new_st = mb.mamba_step(bp["mamba"], cfg, hn, st)
+                h2 = h2 + y
+                hn = cm.rms_norm(h2, bp["norm2"], cfg.norm_eps)
+                return h2 + apply_ffn(bp["ffn"], cfg, hn), new_st
+            h, new_ssm = jax.lax.scan(
+                mamba_body, h,
+                (gp["mamba_blocks"],
+                 {"h": cssm["h"], "conv": cssm["conv"]}))
+            h, new_kv = attn_block_decode(gp["attn_blocks"], cfg, h, ckv, cur)
+            return h, (new_kv, new_ssm)
+        x, (new_kv, new_ssm) = jax.lax.scan(
+            group, x,
+            ({"mamba_blocks": params["mamba_blocks"],
+              "attn_blocks": params["attn_blocks"]},
+             cache["attn"], cache["ssm"]))
+        new_cache = {"attn": new_kv, "ssm": new_ssm, "cur": cur + 1}
+    else:
+        def body(h, xs):
+            bp, ckv = xs
+            h, new_kv = attn_block_decode(bp, cfg, h, ckv, cur)
+            return h, new_kv
+        x, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["attn"]))
+        new_cache = {"attn": new_kv, "cur": cur + 1}
+
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_head(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: ArchConfig, tokens, max_len: Optional[int] = None):
+    """Run the full prompt, build a cache. Returns (last_logits, cache).
+
+    Baseline implementation recomputes per-layer K/V through the stack scan
+    (cache written as scan ys) — the cheap standard approach.
+    """
+    B, T = tokens.shape
+    max_len = max_len or T
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(T)[None, :]
+
+    def kv_of(bp, h):
+        hn = cm.rms_norm(h, bp["norm1"], cfg.norm_eps)
+        _, k, v = cm.attn_qkv(bp["attn"], hn, positions, cfg.rope_theta)
+        pad = max_len - T
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": _cache_store(k, KV_CACHE_DTYPE),
+                "v": _cache_store(v, KV_CACHE_DTYPE)}
+
+    if cfg.family == "hybrid":
+        def group(h, gp):
+            def mamba_body(h2, bp):
+                hn = cm.rms_norm(h2, bp["norm1"], cfg.norm_eps)
+                y, st = mb.mamba_fwd(bp["mamba"], cfg, hn, return_state=True)
+                h2 = h2 + y
+                hn = cm.rms_norm(h2, bp["norm2"], cfg.norm_eps)
+                return h2 + apply_ffn(bp["ffn"], cfg, hn), st
+            h, ssm_states = jax.lax.scan(mamba_body, h, gp["mamba_blocks"])
+            kv = kv_of(gp["attn_blocks"], h)
+            h = attn_block_fwd(gp["attn_blocks"], cfg, h, positions)
+            return h, (kv, ssm_states)
+        x, (kvs, ssm) = jax.lax.scan(
+            group, x,
+            {"mamba_blocks": params["mamba_blocks"],
+             "attn_blocks": params["attn_blocks"]})
+        x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = logits_head(params, cfg, x[:, -1:])
+        # scan stacks states as (G, P-1, ...)
+        cache = {"attn": kvs,
+                 "ssm": {"h": ssm["h"],
+                         "conv": ssm["conv"]},
+                 "cur": jnp.asarray(T, jnp.int32)}
+        return logits, cache
+
+    def body(h, bp):
+        kv = kv_of(bp, h)
+        return attn_block_fwd(bp, cfg, h, positions), kv
+    x, kvs = jax.lax.scan(body, x, params["blocks"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(params, cfg, x[:, -1:])
+    cache = {"attn": kvs, "cur": jnp.asarray(T, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,563 @@
+"""Static analyzer for post-SPMD-partitioning HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA counts each ``while`` body ONCE,
+so scan-over-layers models under-report FLOPs by ~n_layers (measured in
+tests/test_roofline.py). This analyzer walks the call graph from ENTRY,
+multiplies loop bodies by their trip count (recovered from the loop-condition
+``constant(N)``), and produces per-device:
+
+- ``flops``      — 2*M*N*K for every dot (batch dims included), conv approx;
+- ``hbm_bytes``  — operand+output bytes at *fusion boundaries* (instructions
+                   inside fused computations stay in registers/VMEM, so the
+                   post-fusion top-level instruction stream is exactly the
+                   HBM-traffic roofline model);
+- ``ici_bytes``  — ring-model collective traffic per device:
+                   all-gather/reduce-scatter (n-1)/n * bytes, all-reduce
+                   2(n-1)/n * bytes, all-to-all (n-1)/n, permute 1x.
+
+Shapes in post-partitioning HLO are per-device, so all numbers are per-chip.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|s2|u2|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|f8\w*|bf16|f16|f32|f64|c64|c128)"
+    r"\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# HBM-traffic model. CPU-backend HLO is pre-TPU-fusion (every elementwise op
+# is a separate instruction), so we model the fusion a TPU compile would do:
+#   - NO_BYTES: metadata / aliasing ops, no data movement;
+#   - READ_WRITE: ops that genuinely touch HBM. Their *operand reads* are
+#     charged by provenance: an operand produced by a single-use elementwise
+#     chain is charged at the chain's true HBM inputs (operand-side fusion —
+#     e.g. an int8->bf16 dequant feeding a dot reads int8 bytes, not bf16);
+#   - other ops (elementwise, layout): output is written to HBM only if it
+#     has fan-out > 1 or feeds a loop/root boundary; single-consumer chains
+#     fuse into their consumer (producer-consumer fusion).
+NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "while", "conditional", "after-all", "partition-id", "replica-id",
+            "iota", "rng-bit-generator", "call", "opt-barrier", "domain"}
+READ_WRITE = {"dot", "convolution", "fusion", "custom-call", "reduce",
+              "reduce-window", "scatter", "gather", "dynamic-slice",
+              "dynamic-update-slice", "sort", "cholesky", "triangular-solve",
+              "pad", "concatenate"} | set(COLLECTIVES) | \
+    {c + "-start" for c in COLLECTIVES}
+# ops considered fusable for both producer-consumer and operand-side fusion
+FUSABLE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+           "exponential", "exponential-minus-one", "log", "log-plus-one",
+           "tanh", "logistic", "rsqrt", "sqrt", "power", "negate", "abs",
+           "convert", "compare", "select", "and", "or", "not", "xor",
+           "broadcast", "reshape", "transpose", "copy", "slice", "floor",
+           "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+           "clamp", "shift-left", "shift-right-logical",
+           "shift-right-arithmetic", "sine", "cosine", "expm1", "log1p",
+           "is-finite", "real", "imag", "reduce-precision", "map"}
+
+
+def _shape_bytes(spec: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(spec):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(spec: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(spec):
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    spec: str                # output type spec
+    opcode: str
+    args: str                # raw text after opcode '('
+    out_bytes: int = 0
+
+    def operands(self) -> List[str]:
+        """Operand instruction names (tolerates nested parens in attrs)."""
+        depth, cur, ops = 0, "", []
+        for ch in self.args:
+            if ch == "(" :
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+            if ch == "," and depth == 0:
+                ops.append(cur)
+                cur = ""
+            else:
+                cur += ch
+        ops.append(cur)
+        names = []
+        for o in ops:
+            m = re.match(r"\s*%?([\w\.\-]+)", o)
+            if m:
+                names.append(m.group(1))
+        return names
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=([%\w\.\-]+)", self.args)
+        return m.group(1).lstrip("%") if m else None
+
+    def attr_list(self, key: str) -> List[int]:
+        m = re.search(key + r"=\{([\d,]*)\}", self.args)
+        if not m or not m.group(1):
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: Dict[str, Instr] = field(default_factory=dict)
+    params: Dict[str, str] = field(default_factory=dict)   # name -> spec
+    root_opcode: str = ""
+    root_name: str = ""
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)))
+                if cur.is_entry:
+                    entry = cur.name
+            continue
+        if line == "}" or line.startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, spec, opcode, args = m.groups()
+        ins = Instr(name, spec, opcode, args, _shape_bytes(spec))
+        cur.instrs[name] = ins
+        if line.startswith("ROOT"):
+            cur.root_opcode = opcode
+            cur.root_name = name
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, shape_of) -> int:
+    """2 * prod(output dims) * prod(lhs contracting dims)."""
+    ops = ins.operands()
+    if not ops:
+        return 0
+    lhs_spec = shape_of(ops[0])
+    if lhs_spec is None:
+        return 0
+    dims = _shape_dims(lhs_spec)
+    if not dims:
+        return 0
+    lhs_dims = dims[0][1]
+    contract = ins.attr_list("lhs_contracting_dims")
+    k = 1
+    for c in contract:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    out_dims = _shape_dims(ins.spec)
+    out_n = 1
+    for _, ds in out_dims[:1]:
+        for d in ds:
+            out_n *= d
+    return 2 * out_n * k
+
+
+def _conv_flops(ins: Instr, shape_of) -> int:
+    # approximation: 2 * output elems * (kernel elems per output channel)
+    ops = ins.operands()
+    if len(ops) < 2:
+        return 0
+    ker = shape_of(ops[1])
+    if ker is None:
+        return 0
+    kdims = _shape_dims(ker)
+    kn = 1
+    for _, ds in kdims[:1]:
+        for d in ds:
+            kn *= d
+    out = _shape_dims(ins.spec)
+    on = 1
+    for _, ds in out[:1]:
+        for d in ds:
+            on *= d
+    # kernel already includes in_ch * spatial * out_ch; divide by out_ch
+    oc = out[0][1][-1] if out and out[0][1] else 1
+    return 2 * on * max(kn // max(oc, 1), 1)
+
+
+def _group_size(ins: Instr, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", ins.args)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", ins.args)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+def _collective_ici_bytes(ins: Instr, shape_of, n_devices: int) -> int:
+    """Ring-model per-device ICI traffic for one collective op."""
+    op = ins.opcode.replace("-start", "")
+    in_bytes = sum(shape_bytes for shape_bytes in
+                   (_shape_bytes(shape_of(o) or "") for o in ins.operands()))
+    n = max(_group_size(ins, n_devices), 1)
+    if n == 1:
+        return 0
+    frac = (n - 1) / n
+    if op == "all-gather":
+        # operand is the local shard; ring moves shard*(n-1) per device
+        return int(in_bytes * (n - 1))
+    if op == "reduce-scatter":
+        return int(in_bytes * frac)
+    if op == "all-reduce":
+        return int(2 * in_bytes * frac)
+    if op == "all-to-all":
+        return int(in_bytes * frac)
+    if op == "collective-permute":
+        return int(in_bytes)
+    return 0
+
+
+def _while_trip_count(cond: Computation) -> int:
+    """Loop condition is `compare(counter, constant(N), LT)` for lax.scan;
+    take the largest integer constant in the condition computation."""
+    best = 1
+    for ins in cond.instrs.values():
+        if ins.opcode == "constant":
+            m = re.match(r"\s*([\d]+)", ins.args)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclass
+class RooflineCounts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    ici_bytes: float = 0.0
+    collective_bytes_by_type: Dict[str, float] = field(default_factory=dict)
+    n_collectives: int = 0
+    n_dots: int = 0
+    warnings: List[str] = field(default_factory=list)
+
+    def add(self, other: "RooflineCounts", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.ici_bytes += other.ici_bytes * mult
+        for k, v in other.collective_bytes_by_type.items():
+            self.collective_bytes_by_type[k] = \
+                self.collective_bytes_by_type.get(k, 0.0) + v * mult
+        self.n_collectives += other.n_collectives
+        self.n_dots += other.n_dots
+        self.warnings.extend(other.warnings)
+
+
+class HLOAnalyzer:
+    def __init__(self, text: str, n_devices: int):
+        self.comps, self.entry = parse_hlo(text)
+        self.n_devices = n_devices
+        self._memo: Dict[Tuple[str, bool], RooflineCounts] = {}
+
+    def _shape_of_factory(self, comp: Computation):
+        def shape_of(name: str) -> Optional[str]:
+            ins = comp.instrs.get(name)
+            return ins.spec if ins else None
+        return shape_of
+
+    def analyze(self) -> RooflineCounts:
+        if self.entry not in self.comps:
+            rc = RooflineCounts()
+            rc.warnings.append("no ENTRY computation found")
+            return rc
+        return self._walk(self.entry, count_bytes=True)
+
+    def _consumer_counts(self, comp: Computation) -> Dict[str, int]:
+        key = ("__consumers__", comp.name)
+        if key in self._memo:
+            return self._memo[key]      # type: ignore[return-value]
+        counts: Dict[str, int] = {}
+        for i2 in comp.instrs.values():
+            for o in i2.operands():
+                counts[o] = counts.get(o, 0) + 1
+        self._memo[key] = counts        # type: ignore[assignment]
+        return counts
+
+    def _pure_elementwise_fusion(self, ins: Instr) -> bool:
+        """True if a fusion's callee is only FUSABLE ops + parameters (a
+        pure convert/elementwise chain). XLA CPU materializes these (e.g.
+        re-converting a whole loop-carried KV cache to f32 every trip —
+        measured 618 GB/step on deepseek decode); a TPU compile fuses them
+        into the consumer, so they are treated as pass-through."""
+        if ins.opcode != "fusion":
+            return False
+        key = ("__pure__", ins.attr("calls"))
+        if key in self._memo:
+            return self._memo[key]      # type: ignore[return-value]
+        callee = self.comps.get(ins.attr("calls") or "")
+        ok = callee is not None and all(
+            i2.opcode in FUSABLE or i2.opcode == "parameter"
+            for i2 in callee.instrs.values())
+        self._memo[key] = ok            # type: ignore[assignment]
+        return ok
+
+    def _provenance_bytes(self, comp: Computation, name: str,
+                          depth: int = 0) -> int:
+        """HBM bytes actually read to produce operand ``name`` assuming the
+        consumer fuses single-use elementwise producers (operand fusion)."""
+        ins = comp.instrs.get(name)
+        if ins is None:
+            return 0
+        if depth >= 6:
+            return ins.out_bytes
+        if ins.opcode not in FUSABLE and not self._pure_elementwise_fusion(ins):
+            return ins.out_bytes
+        ops = ins.operands()
+        if not ops:
+            return ins.out_bytes
+        return sum(self._provenance_bytes(comp, o, depth + 1) for o in ops)
+
+    def _instr_bytes(self, ins: Instr, shape_of) -> int:
+        """HBM traffic model per top-level instruction (see module docstring).
+
+        Scan-stacking and slicing are special-cased: XLA performs
+        dynamic-update-slice in place, so only the updated slice moves —
+        charging the whole accumulation buffer per loop trip overstates a
+        jamba train step by ~100x (measured).
+        """
+        op = ins.opcode
+        if op == "dynamic-slice":
+            return 2 * ins.out_bytes
+        if op == "dynamic-update-slice":
+            ops = ins.operands()
+            upd = self._provenance_bytes(self._cur_comp, ops[1]) \
+                if len(ops) > 1 else 0
+            return 2 * upd
+        if op == "fusion":
+            if self._pure_elementwise_fusion(ins):
+                # pass-through: consumers charge it via provenance
+                n_cons = self._consumer_counts(self._cur_comp).get(ins.name, 0)
+                return 0 if n_cons >= 1 else ins.out_bytes
+            return self._fusion_bytes(ins, shape_of)
+        if op in READ_WRITE:
+            in_b = sum(self._provenance_bytes(self._cur_comp, o)
+                       for o in ins.operands())
+            return in_b + ins.out_bytes
+        # elementwise / layout op: written to HBM only on fan-out or at a
+        # loop/root boundary (single-use chains fuse into the consumer)
+        if op in FUSABLE and \
+                self._consumer_counts(self._cur_comp).get(ins.name, 0) == 1:
+            return 0
+        return ins.out_bytes
+
+    def _fusion_bytes(self, ins: Instr, shape_of) -> int:
+        """Traffic of a fusion = what the fused computation actually touches:
+
+        - a parameter consumed only through dynamic-slice reads is charged
+          the slice sizes, not the whole buffer (loop-carried scan xs);
+        - the base operand of a root dynamic-update-slice is aliased in
+          place: charged 0 reads, and the write is the update size, not the
+          whole accumulator (scan ys stacking);
+        - everything else: full operand reads + full output write.
+        """
+        callee_name = ins.attr("calls")
+        callee = self.comps.get(callee_name or "")
+        opsz = [self._provenance_bytes(self._cur_comp, o)
+                for o in ins.operands()]
+        if callee is None:
+            return sum(opsz) + ins.out_bytes
+        # param index -> name, and consumer map
+        params: Dict[int, str] = {}
+        for i2 in callee.instrs.values():
+            if i2.opcode == "parameter":
+                m = re.match(r"\s*(\d+)", i2.args)
+                if m:
+                    params[int(m.group(1))] = i2.name
+        consumers: Dict[str, List[Instr]] = {}
+        for i2 in callee.instrs.values():
+            for o in i2.operands():
+                consumers.setdefault(o, []).append(i2)
+        root_ins = callee.instrs.get(callee.root_name)
+
+        def resolve(el):
+            # peel copy/convert wrappers (donation layout copies) off the
+            # real producer so in-place DUS updates are recognized
+            d = 0
+            while el is not None and el.opcode in FUSABLE and d < 4:
+                ops2 = el.operands()
+                if not ops2:
+                    break
+                el = callee.instrs.get(ops2[0])
+                d += 1
+            return el
+
+        # fusion outputs: either the root, or each element of a root tuple
+        # (multi-output fusion — e.g. the layer-scan's cache update emits a
+        # tuple of dynamic-update-slices over the stacked KV buffers).
+        elements: List[Optional[Instr]] = [resolve(root_ins)]
+        if root_ins is not None and root_ins.opcode == "tuple":
+            elements = [resolve(callee.instrs.get(n))
+                        for n in root_ins.operands()]
+        out_b = 0
+        dus_bases = set()
+        for el in elements:
+            if el is None:
+                continue
+            if el.opcode == "dynamic-update-slice":
+                rops = el.operands()
+                upd = callee.instrs.get(rops[1]) if len(rops) > 1 else None
+                out_b += upd.out_bytes if upd is not None else el.out_bytes
+                if rops:
+                    dus_bases.add(rops[0])
+            else:
+                out_b += el.out_bytes
+
+        for idx, pname in params.items():
+            if idx >= len(opsz):
+                continue
+            cons = consumers.get(pname, [])
+            if not cons:
+                opsz[idx] = 0
+                continue
+            if all(c.opcode == "dynamic-slice" for c in cons):
+                opsz[idx] = sum(c.out_bytes for c in cons)
+            elif pname in dus_bases and all(
+                    c.opcode in ("dynamic-update-slice", "dynamic-slice")
+                    or c.opcode in FUSABLE for c in cons):
+                # in-place base of the stacked buffer: charge only the
+                # dynamic-slice reads of it, the update happens in place
+                opsz[idx] = sum(c.out_bytes for c in cons
+                                if c.opcode == "dynamic-slice")
+        return sum(opsz) + out_b
+
+    def _walk(self, comp_name: str, count_bytes: bool) -> RooflineCounts:
+        key = (comp_name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        rc = RooflineCounts()
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return rc
+        self._cur_comp = comp
+        shape_of = self._shape_of_factory(comp)
+        for ins in comp.instrs.values():
+            op = ins.opcode
+            if op == "dot":
+                rc.flops += _dot_flops(ins, shape_of)
+                rc.n_dots += 1
+            elif op == "convolution":
+                rc.flops += _conv_flops(ins, shape_of)
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                b = _collective_ici_bytes(ins, shape_of, self.n_devices)
+                rc.ici_bytes += b
+                rc.collective_bytes_by_type[base] = \
+                    rc.collective_bytes_by_type.get(base, 0.0) + b
+                rc.n_collectives += 1
+            if count_bytes and op not in NO_BYTES:
+                rc.hbm_bytes += self._instr_bytes(ins, shape_of)
+            # recurse (note: recursion below re-enters _walk which resets
+            # _cur_comp; restore it afterwards)
+            if op == "while":
+                body = ins.attr("body")
+                cond = ins.attr("condition")
+                trips = 1
+                if cond and cond in self.comps:
+                    trips = _while_trip_count(self.comps[cond])
+                if body:
+                    rc.add(self._walk(body, count_bytes), trips)
+                if cond:
+                    rc.add(self._walk(cond, count_bytes), trips)
+            elif op in ("fusion", "call", "custom-call", "map", "reduce",
+                        "reduce-window", "scatter", "sort", "select-and-scatter",
+                        "all-reduce", "reduce-scatter"):
+                callee = ins.attr("calls") or ins.attr("to_apply")
+                if callee:
+                    # fused/applied computations: flops only, no byte
+                    # counting (they live in registers/VMEM)
+                    rc.add(self._walk(callee, count_bytes=False), 1.0)
+            elif op == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.args)
+                if m:
+                    branches = [b.strip().lstrip("%")
+                                for b in m.group(1).split(",")]
+                    subs = [self._walk(b, count_bytes) for b in branches
+                            if b in self.comps]
+                    if subs:   # worst case branch
+                        worst = max(subs, key=lambda s: s.flops + s.hbm_bytes)
+                        rc.add(worst, 1.0)
+        self._memo[key] = rc
+        return rc
+
+    _cur_comp: Optional[Computation] = None
+
+
+def analyze_hlo(text: str, n_devices: int) -> RooflineCounts:
+    return HLOAnalyzer(text, n_devices).analyze()
+
+
+def top_contributors(text: str, n_devices: int, top: int = 12):
+    """Debug/perf-iteration aid: per-instruction HBM charges with loop
+    multipliers, sorted descending — 'the profile' for §Perf napkin math."""
+    az = HLOAnalyzer(text, n_devices)
+    mult: Dict[str, float] = {az.entry: 1.0}
+    order, seen = [az.entry], set()
+    while order:
+        c = order.pop()
+        if c in seen or c not in az.comps:
+            continue
+        seen.add(c)
+        for ins in az.comps[c].instrs.values():
+            if ins.opcode == "while":
+                body, cond = ins.attr("body"), ins.attr("condition")
+                trips = _while_trip_count(az.comps[cond]) \
+                    if cond in az.comps else 1
+                for x in (body, cond):
+                    if x in az.comps:
+                        mult[x] = mult.get(x, 0) + mult[c] * trips
+                        order.append(x)
+    rows = []
+    for c in seen:
+        comp = az.comps[c]
+        az._cur_comp = comp
+        so = az._shape_of_factory(comp)
+        for ins in comp.instrs.values():
+            if ins.opcode in NO_BYTES:
+                continue
+            b = az._instr_bytes(ins, so)
+            if b:
+                rows.append((b * mult[c], b, mult[c], c, ins.opcode,
+                             ins.spec[:60]))
+    rows.sort(reverse=True)
+    return rows[:top]

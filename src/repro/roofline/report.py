@@ -1,0 +1,105 @@
+"""Roofline term computation from dry-run artifacts (assignment §ROOFLINE).
+
+  compute term    = per_device_FLOPs / peak_FLOP/s          (197 TF bf16/chip)
+  memory term     = per_device_HBM_bytes / HBM_bw           (819 GB/s)
+  collective term = per_device_ICI_bytes / link_bw          (50 GB/s/link)
+
+The HLO analyzer reports per-device numbers (post-partitioning shapes), which
+is equivalent to the assignment's global/(chips*peak) formulation.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from repro.core.hardware import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_FLOPS_BF16
+from repro.roofline.hlo_analysis import RooflineCounts, analyze_hlo
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # per-device counts
+    flops: float
+    hbm_bytes: float
+    ici_bytes: float
+    collective_bytes_by_type: Dict[str, float]
+    n_collectives: int
+    # terms (seconds)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    # usefulness
+    model_flops: float = 0.0          # analytic 6*N*D (global)
+    hlo_total_flops: float = 0.0      # per-device * chips
+    useful_ratio: float = 0.0         # model_flops / hlo_total_flops
+    # XLA-reported (uncorrected; while bodies counted once)
+    xla_flops: Optional[float] = None
+    xla_bytes: Optional[float] = None
+    # memory analysis
+    argument_bytes_per_device: Optional[float] = None
+    temp_bytes_per_device: Optional[float] = None
+    output_bytes_per_device: Optional[float] = None
+    roofline_fraction: float = 0.0    # compute_s / max(term) — MFU upper bound
+    step_time_lower_bound_s: float = 0.0
+
+    @classmethod
+    def build(cls, *, arch: str, shape: str, mesh: str, n_devices: int,
+              counts: RooflineCounts, model_flops: float,
+              xla_cost: Optional[dict] = None,
+              memory_stats: Optional[object] = None) -> "RooflineReport":
+        compute_s = counts.flops / TPU_PEAK_FLOPS_BF16
+        memory_s = counts.hbm_bytes / TPU_HBM_BW
+        collective_s = counts.ici_bytes / TPU_ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": collective_s}
+        bottleneck = max(terms, key=terms.get)
+        total = counts.flops * n_devices
+        rep = cls(
+            arch=arch, shape=shape, mesh=mesh, n_devices=n_devices,
+            flops=counts.flops, hbm_bytes=counts.hbm_bytes,
+            ici_bytes=counts.ici_bytes,
+            collective_bytes_by_type=dict(counts.collective_bytes_by_type),
+            n_collectives=counts.n_collectives,
+            compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+            bottleneck=bottleneck,
+            model_flops=model_flops, hlo_total_flops=total,
+            useful_ratio=(model_flops / total) if total else 0.0,
+            roofline_fraction=(compute_s / max(terms.values()))
+            if max(terms.values()) > 0 else 0.0,
+            step_time_lower_bound_s=max(terms.values()),
+        )
+        if xla_cost:
+            rep.xla_flops = xla_cost.get("flops")
+            rep.xla_bytes = xla_cost.get("bytes accessed")
+        if memory_stats is not None:
+            rep.argument_bytes_per_device = getattr(
+                memory_stats, "argument_size_in_bytes", None)
+            rep.temp_bytes_per_device = getattr(
+                memory_stats, "temp_size_in_bytes", None)
+            rep.output_bytes_per_device = getattr(
+                memory_stats, "output_size_in_bytes", None)
+        return rep
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+    def summary_row(self) -> str:
+        return (f"{self.arch:24s} {self.shape:12s} {self.mesh:6s} "
+                f"C={self.compute_s*1e3:9.3f}ms M={self.memory_s*1e3:9.3f}ms "
+                f"I={self.collective_s*1e3:9.3f}ms -> {self.bottleneck:10s} "
+                f"frac={self.roofline_fraction:5.2f} useful={self.useful_ratio:5.2f}")
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D for training (N=active params, D=tokens);
+    2*N*D for inference steps."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n = cfg.n_active_params() if hasattr(cfg, "n_active_params") else 0
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

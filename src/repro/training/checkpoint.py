@@ -1,0 +1,136 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, async, elastic.
+
+Layout: <dir>/step_<N>/arrays.npz + manifest.json (step, flat keys, config
+hash, saved mesh). Writes go to a tmp dir + os.replace (atomic on POSIX) so a
+crash mid-save never corrupts the latest checkpoint. Restore rebuilds the
+pytree and (re)shards to WHATEVER mesh is active — device count may differ
+from save time (elastic restart).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
+         extra: Optional[dict] = None) -> str:
+    """Atomic synchronous save. Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {"step": step, "keys": sorted(flat), "time": time.time()}
+    if extra:
+        manifest.update(extra)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, target_tree, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``target_tree``; if ``shardings`` is a
+    matching tree of NamedShardings, arrays are placed sharded (elastic:
+    works for any current mesh, regardless of the saving mesh)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(target_tree)
+    paths, treedef = leaves_with_path
+    shard_flat = _flatten(shardings) if shardings is not None else {}
+    out = []
+    for pth, leaf in paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        arr = flat[key]
+        if arr.dtype.kind == "V":
+            # numpy stores bfloat16 as raw void bytes; re-view with the
+            # target leaf's dtype (ml_dtypes) on load
+            arr = arr.view(np.dtype(leaf.dtype))
+        if key in shard_flat:
+            out.append(jax.device_put(arr, shard_flat[key]))
+        else:
+            out.append(jax.device_put(arr))
+    rebuilt = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target_tree), out)
+    return rebuilt, step
+
+
+class AsyncCheckpointer:
+    """Off-critical-path saves: snapshot to host, write in a worker thread.
+    One in-flight save at a time (a newer request supersedes a queued one)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._pending: Optional[tuple] = None
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps: List[int] = []
+
+    def save(self, step: int, tree, extra: Optional[dict] = None) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        with self._lock:
+            self._pending = (step, host_tree, extra)
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._drain, daemon=True)
+                self._thread.start()
+
+    def _drain(self) -> None:
+        while True:
+            with self._lock:
+                if self._pending is None:
+                    return
+                step, tree, extra = self._pending
+                self._pending = None
+            save(self.ckpt_dir, step, tree, keep=self.keep, extra=extra)
+            self.saved_steps.append(step)
+
+    def wait(self) -> None:
+        t = self._thread
+        if t is not None:
+            t.join()

@@ -1,0 +1,46 @@
+"""Binary-connect QAT for beacon retraining (paper §4.3).
+
+Quantized weights are used in forward/backward (STE), the update applies to
+the full-precision master copy — so the retrained floating-point parameters
+can later serve any neighboring quantization configuration (that is what
+makes them usable as a *beacon*).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mohaq import Alloc
+from repro.models import sru
+from repro.training import optimizer as opt
+
+
+def retrain_sru(params, cfg, alloc: Alloc, batches: Iterator[dict],
+                *, steps: int = 60, lr: float = 3e-4,
+                act_ranges=None, wclips=None):
+    """Retrain the SRU model under the quantization config ``alloc``.
+    Returns new full-precision params (the beacon)."""
+    ocfg = opt.AdamWConfig(lr=lr, schedule="constant", warmup_steps=5,
+                           weight_decay=0.0, total_steps=steps)
+    opt_state = opt.init_opt_state(params)
+
+    def loss_fn(p, feats, labels):
+        logits = sru.forward(p, cfg, feats, qspec=alloc, wclips=wclips,
+                             act_ranges=act_ranges)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logp, labels[..., None], axis=-1)
+        return -jnp.mean(gold)
+
+    @jax.jit
+    def step_fn(p, o, feats, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(p, feats, labels)
+        p2, o2, _ = opt.adamw_update(ocfg, p, grads, o)
+        return p2, o2, loss
+
+    for _ in range(steps):
+        batch = next(batches)
+        params, opt_state, loss = step_fn(params, opt_state,
+                                          batch["feats"], batch["labels"])
+    return params

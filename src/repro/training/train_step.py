@@ -1,0 +1,76 @@
+"""pjit train / serve step builders shared by the trainer and the dry-run."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.training import optimizer as opt
+
+
+@dataclass(frozen=True)
+class TrainState:
+    pass  # train state is a plain dict pytree: {"params", "opt", "step"}
+
+
+def init_train_state(model: Model, key):
+    params = model.init(key)
+    return {"params": params, "opt": opt.init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_axes(model: Model):
+    pax = model.axes()
+    return {"params": pax, "opt": opt.opt_state_axes(pax), "step": ()}
+
+
+def make_train_step(model: Model, ocfg: opt.AdamWConfig,
+                    accum_steps: int = 1):
+    """Returns step(state, batch) -> (state, metrics). Gradient accumulation
+    via scan over microbatches when accum_steps > 1."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def step(state, batch):
+        params = state["params"]
+        if accum_steps > 1:
+            def micro(carry, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc_loss, acc_g = carry
+                return (acc_loss + loss,
+                        jax.tree.map(jnp.add, acc_g, grads)), None
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), mbs)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt, metrics = opt.adamw_update(
+            ocfg, params, grads, state["opt"])
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+def make_serve_decode(model: Model):
+    def step(params, cache, batch):
+        return model.decode(params, cache, batch)
+    return step
+
+
+def make_serve_prefill(model: Model, static_kwargs: Optional[dict] = None):
+    static_kwargs = static_kwargs or {}
+
+    def step(params, batch):
+        return model.prefill(params, {**batch, **static_kwargs})
+    return step

@@ -1,0 +1,96 @@
+"""Beacon-based search (paper §4.3 / Algorithm 1)."""
+import numpy as np
+import pytest
+
+from repro.core.beacon import BeaconSearch, beacon_distance
+from repro.core.hardware import BITFUSION
+from repro.core.mohaq import MOHAQProblem
+
+
+def make_problem(error_fn):
+    lw = {f"L{i}": 1000 for i in range(8)}
+    return MOHAQProblem(list(lw), lw, lw, 0, BITFUSION, error_fn, 10.0)
+
+
+class TestDistance:
+    def test_log2_weights_only(self):
+        names = ["a", "b"]
+        s = {"a": (2, 16), "b": (16, 2)}
+        b = {"a": (16, 16), "b": (16, 16)}
+        # |log2(2)-log2(16)| + 0 = 3
+        assert beacon_distance(s, b, names) == 3.0
+
+    def test_ignores_activations(self):
+        names = ["a"]
+        assert beacon_distance({"a": (4, 2)}, {"a": (4, 16)}, names) == 0.0
+
+
+class FakeRetrainer:
+    """Retraining halves the quantization-induced error gain."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def retrain(self, alloc, base_params):
+        self.calls += 1
+        return {"recovered": True, "alloc": dict(alloc)}
+
+
+class TestAlgorithm1:
+    def err(self, params, alloc):
+        # error gain grows with low-bitness (0 at 16-bit); beacons halve it
+        gain = sum(16.0 / w - 1.0 for w, _ in alloc.values())
+        if isinstance(params, dict) and params.get("recovered"):
+            gain *= 0.5
+        return 10.0 + gain / 8.0
+
+    def make(self, threshold=6.0):
+        fr = FakeRetrainer()
+        prob = make_problem(lambda a: 0.0)
+        bs = BeaconSearch(problem=prob, base_params="base",
+                          retrain_fn=fr.retrain,
+                          error_with_params=self.err,
+                          distance_threshold=threshold,
+                          min_error_gain_to_retrain=0.5)
+        return bs, fr
+
+    def test_first_beacon_created(self):
+        bs, fr = self.make()
+        alloc = {f"L{i}": (2, 8) for i in range(8)}
+        e = bs.error_fn(alloc)
+        assert fr.calls == 1
+        assert len(bs.beacons) == 1
+        # error evaluated with the beacon (halved gain)
+        assert e < self.err("base", alloc)
+
+    def test_neighbor_reuses_beacon(self):
+        bs, fr = self.make()
+        a1 = {f"L{i}": (2, 8) for i in range(8)}
+        bs.error_fn(a1)
+        a2 = dict(a1, L0=(4, 8))     # distance 1 < threshold
+        bs.error_fn(a2)
+        assert fr.calls == 1         # no second retrain
+
+    def test_far_solution_becomes_new_beacon(self):
+        bs, fr = self.make(threshold=3.0)
+        bs.error_fn({f"L{i}": (2, 8) for i in range(8)})
+        bs.error_fn({f"L{i}": (8, 8) for i in range(8)})  # distance 16
+        assert fr.calls == 2
+
+    def test_low_error_not_retrained(self):
+        bs, fr = self.make()
+        # all-16-bit: no error gain -> below min_error_gain_to_retrain
+        bs.error_fn({f"L{i}": (16, 16) for i in range(8)})
+        assert fr.calls == 0
+
+    def test_beacon_improves_errors_like_fig5(self):
+        """Fig 5: the larger the PTQ error gain, the larger the recovery."""
+        bs, fr = self.make()
+        allocs = [{f"L{i}": (b, 8) for i in range(8)} for b in (2, 4)]
+        gains, recoveries = [], []
+        for a in allocs:
+            base_e = self.err("base", a)
+            e = bs.error_fn(a)
+            gains.append(base_e - 10.0)
+            recoveries.append(base_e - e)
+        assert recoveries[0] > recoveries[1] > 0

@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode) — shape/dtype/bit
+sweeps per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.quant_matmul import quant_matmul as raw_qmm
+from repro.kernels.sru_scan import sru_scan as raw_sru
+
+
+class TestPacking:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("k,n", [(8, 4), (64, 32), (100, 7)])
+    def test_roundtrip(self, bits, k, n):
+        lo, hi = {8: (-128, 127), 4: (-8, 7), 2: (-2, 1)}[bits]
+        q = jax.random.randint(jax.random.PRNGKey(k * n), (k, n),
+                               lo, hi + 1).astype(jnp.int8)
+        packed = ref.pack_weights(q, bits)
+        per = 8 // bits
+        assert packed.shape[0] == -(-k // per)
+        assert (ref.unpack_weights(packed, bits, k) == q).all()
+
+    @given(st.sampled_from([2, 4, 8]), st.integers(1, 40), st.integers(1, 16))
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip_property(self, bits, k, n):
+        lo, hi = {8: (-128, 127), 4: (-8, 7), 2: (-2, 1)}[bits]
+        q = jax.random.randint(jax.random.PRNGKey(bits + k + n), (k, n),
+                               lo, hi + 1).astype(jnp.int8)
+        packed = ref.pack_weights(q, bits)
+        assert (ref.unpack_weights(packed, bits, k) == q).all()
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("m,k,n", [(4, 16, 8), (100, 200, 130),
+                                       (128, 256, 128), (1, 512, 64)])
+    def test_vs_ref(self, bits, m, k, n):
+        kx, kw = jax.random.split(jax.random.PRNGKey(bits))
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32)
+        packed, scales = ops.pack_for_kernel(w, bits, clip=2.0)
+        y_ref = ref.quant_matmul_ref(x, packed, scales, bits)
+        y_k = ops.quant_matmul(x, packed, scales, bits, interpret=True)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-3)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 64)).astype(dtype)
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.float32)
+        packed, scales = ops.pack_for_kernel(w, 4, clip=2.0)
+        y_ref = ref.quant_matmul_ref(x.astype(jnp.float32), packed, scales, 4)
+        y_k = ops.quant_matmul(x.astype(jnp.float32), packed, scales, 4,
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_blockspec_path_aligned(self):
+        """Raw kernel (no padding) at exactly MXU-aligned sizes."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+        packed, scales = ops.pack_for_kernel(w, 4, clip=2.5)
+        y = raw_qmm(x, packed, scales, 4, block=(128, 128, 256),
+                    interpret=True)
+        y_ref = ref.quant_matmul_ref(x, packed, scales, 4)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_quantization_noise_bounded(self):
+        """int8 dequant matmul approximates the f32 matmul."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 128), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 64), jnp.float32)
+        packed, scales = ops.pack_for_kernel(w, 8, clip=float(jnp.max(jnp.abs(w))))
+        y = ops.quant_matmul(x, packed, scales, 8, interpret=True)
+        rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+        assert rel < 0.01
+
+
+class TestSRUScan:
+    @pytest.mark.parametrize("b,t,n", [(1, 4, 8), (3, 17, 50), (8, 33, 128),
+                                       (2, 64, 200)])
+    def test_vs_ref(self, b, t, n):
+        ks = jax.random.split(jax.random.PRNGKey(b * t * n), 5)
+        uw, uf, ur = (jax.random.normal(k, (b, t, n)) for k in ks[:3])
+        vf, vr = (jax.random.normal(k, (n,)) * 0.1 for k in ks[3:5])
+        bf, br = jnp.zeros(n), jnp.full((n,), 0.5)
+        h_ref, _ = ref.sru_scan_ref(uw, uf, ur, vf, vr, bf, br)
+        h_k = ops.sru_scan(uw, uf, ur, vf, vr, bf, br, interpret=True)
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_final_state(self):
+        b, t, n = 2, 12, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        uw, uf, ur = (jax.random.normal(k, (b, t, n)) for k in ks)
+        vf = jnp.ones(n) * 0.1
+        vr = jnp.ones(n) * -0.1
+        z = jnp.zeros(n)
+        _, c_ref = ref.sru_scan_ref(uw, uf, ur, vf, vr, z, z)
+        _, c_k = raw_sru(uw, uf, ur, vf, vr, z, z, block=(2, n),
+                         interpret=True)
+        np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_model_integration(self):
+        """models/sru.py with use_kernel=True matches the scan path."""
+        from repro.models import sru as sru_model
+        cfg = sru_model.SRUModelConfig(input_dim=8, hidden=16, proj=8,
+                                       n_sru_layers=2, n_outputs=10)
+        params = sru_model.init_params(jax.random.PRNGKey(0), cfg)
+        feats = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 8))
+        y_scan = sru_model.forward(params, cfg, feats, use_kernel=False)
+        y_kern = sru_model.forward(params, cfg, feats, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_scan),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,225 @@
+"""Per-arch reduced smoke tests: one forward/train step + serve steps on CPU,
+asserting output shapes + no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES_BY_NAME, reduced_shape, shape_applicable
+from repro.models.registry import get_model, make_dummy_batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_train_step(self, arch, key):
+        cfg = get_config(arch).reduced()
+        model = get_model(cfg)
+        params = model.init(key)
+        batch = make_dummy_batch(cfg, reduced_shape(SHAPES_BY_NAME["train_4k"]))
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch))(params)
+        assert jnp.isfinite(loss), arch
+        gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                    for g in jax.tree.leaves(grads))
+        assert jnp.isfinite(gnorm) and gnorm > 0, arch
+
+    def test_decode_step(self, arch, key):
+        cfg = get_config(arch).reduced()
+        model = get_model(cfg)
+        params = model.init(key)
+        shape = reduced_shape(SHAPES_BY_NAME["decode_32k"])
+        cache = model.init_cache(shape.global_batch, shape.seq_len)
+        batch = make_dummy_batch(cfg, shape)
+        logits, cache2 = model.decode(params, cache, batch)
+        assert logits.shape[:2] == (shape.global_batch, 1)
+        assert jnp.isfinite(logits.astype(jnp.float32)).all(), arch
+        assert int(cache2["cur"]) == 1
+
+    def test_prefill(self, arch, key):
+        cfg = get_config(arch).reduced()
+        model = get_model(cfg)
+        params = model.init(key)
+        shape = reduced_shape(SHAPES_BY_NAME["prefill_32k"])
+        batch = make_dummy_batch(cfg, shape)
+        if cfg.family == "audio":
+            batch["max_len"] = shape.seq_len
+        logits, cache = model.prefill(params, batch)
+        assert jnp.isfinite(logits.astype(jnp.float32)).all(), arch
+
+
+def test_long_500k_skip_policy():
+    """Sub-quadratic archs run long_500k; full-attention archs skip."""
+    runs = {a for a in ARCH_IDS if shape_applicable(
+        get_config(a), SHAPES_BY_NAME["long_500k"]) is None}
+    assert runs == {"jamba-1.5-large-398b", "xlstm-350m"}
+
+
+class TestDecodeConsistency:
+    """prefill + decode_step agrees with the full forward pass."""
+
+    def test_dense_prefill_decode_vs_forward(self, key=jax.random.PRNGKey(3)):
+        from repro.models import transformer as tfm
+        cfg = get_config("stablelm-1.6b").reduced()
+        params = tfm.init_lm(key, cfg)
+        toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+        full = tfm.forward(params, cfg, toks, remat=False)
+        logits_p, cache = tfm.prefill(params, cfg, toks[:, :7], max_len=8)
+        logits_d, _ = tfm.decode_step(params, cfg, cache, toks[:, 7:8])
+        # prefill logits at last prompt position == forward at position 6
+        assert jnp.allclose(full[:, 6], logits_p[:, 0], atol=0.15), \
+            float(jnp.max(jnp.abs(full[:, 6] - logits_p[:, 0])))
+        assert jnp.allclose(full[:, 7], logits_d[:, 0], atol=0.15)
+
+    def test_xlstm_prefill_decode_vs_forward(self):
+        from repro.models import xlstm
+        cfg = get_config("xlstm-350m").reduced()
+        params = xlstm.init_lm(jax.random.PRNGKey(1), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                  cfg.vocab_size)
+        full = xlstm.forward(params, cfg, toks, remat=False)
+        lp, state = xlstm.prefill(params, cfg, toks[:, :7])
+        ld, _ = xlstm.decode_step(params, cfg, state, toks[:, 7:8])
+        assert jnp.allclose(full[:, 6], lp[:, 0], atol=0.2)
+        assert jnp.allclose(full[:, 7], ld[:, 0], atol=0.2)
+
+    def test_hybrid_prefill_decode_vs_forward(self):
+        from repro.models import transformer as tfm
+        from repro.models import common as cm
+        # capacity-MoE drops depend on co-batched tokens; raise capacity so
+        # forward and decode route identically for this equivalence check
+        old = cm.MOE_CAPACITY_FACTOR
+        cm.MOE_CAPACITY_FACTOR = 8.0
+        self.addCleanup = None
+        cfg = get_config("jamba-1.5-large-398b").reduced()
+        params = tfm.init_lm(jax.random.PRNGKey(1), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                  cfg.vocab_size)
+        full = tfm.forward(params, cfg, toks, remat=False)
+        lp, cache = tfm.prefill(params, cfg, toks[:, :7], max_len=8)
+        ld, _ = tfm.decode_step(params, cfg, cache, toks[:, 7:8])
+        try:
+            assert jnp.allclose(full[:, 6], lp[:, 0], atol=0.25), \
+                float(jnp.max(jnp.abs(full[:, 6] - lp[:, 0])))
+            assert jnp.allclose(full[:, 7], ld[:, 0], atol=0.25)
+        finally:
+            cm.MOE_CAPACITY_FACTOR = old
+
+
+class TestMamba:
+    def test_chunked_matches_step_by_step(self):
+        from repro.models import mamba as mb
+        cfg = get_config("jamba-1.5-large-398b").reduced()
+        p = mb.init_mamba(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model),
+                              jnp.float32).astype(jnp.bfloat16)
+        y_full, st = mb.mamba_fwd(p, cfg, x, return_state=True)
+        # run the same tokens one step at a time
+        state = {"h": jnp.zeros((2, cfg.ssm_d_inner, cfg.ssm_d_state)),
+                 "conv": jnp.zeros((2, cfg.ssm_d_conv - 1, cfg.ssm_d_inner),
+                                   jnp.bfloat16)}
+        ys = []
+        for t in range(12):
+            y, state = mb.mamba_step(p, cfg, x[:, t:t+1], state)
+            ys.append(y)
+        y_seq = jnp.concatenate(ys, axis=1)
+        assert jnp.allclose(y_full.astype(jnp.float32),
+                            y_seq.astype(jnp.float32), atol=0.05), \
+            float(jnp.max(jnp.abs(y_full.astype(jnp.float32)
+                                  - y_seq.astype(jnp.float32))))
+        assert jnp.allclose(st["h"], state["h"], atol=0.05)
+
+
+class TestMoE:
+    def test_capacity_dispatch_weights(self):
+        from repro.models import common as cm
+        key = jax.random.PRNGKey(0)
+        gates = jax.nn.softmax(jax.random.normal(key, (32, 8)), -1)
+        dispatch, combine = cm._dispatch_mask(gates, top_k=2, capacity=16)
+        # each token contributes <= top_k slots; combine weights sum <= 1
+        per_tok = combine.sum(axis=(1, 2))
+        assert float(per_tok.max()) <= 1.0 + 1e-5
+        # capacity respected
+        per_slot = dispatch.sum(axis=0)
+        assert (per_slot <= 1).all()
+
+
+class TestMLSTMChunkStepEquivalence:
+    """Regression: the chunked mLSTM normalizer must equal the step
+    recurrence (a double-counted q.k factor in the chunked denominator was
+    caught by prefill/decode consistency and fixed)."""
+
+    def test_chunk_sizes_agree(self):
+        from repro.models import xlstm
+        cfg = get_config("xlstm-350m").reduced()
+        p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model),
+                              jnp.float32).astype(jnp.bfloat16)
+        y_c4 = xlstm.mlstm_fwd(p, cfg, x, chunk=4)
+        y_c12 = xlstm.mlstm_fwd(p, cfg, x, chunk=12)
+        assert jnp.allclose(y_c4.astype(jnp.float32),
+                            y_c12.astype(jnp.float32), atol=0.05)
+        # step-by-step
+        H = cfg.n_heads
+        dh = cfg.ssm_d_inner // H
+        st = {"S": jnp.zeros((2, H, dh, dh)), "n": jnp.zeros((2, H, dh)),
+              "m": jnp.zeros((2, H))}
+        ys = []
+        for t in range(12):
+            y, st = xlstm.mlstm_step(p, cfg, x[:, t:t+1], st)
+            ys.append(y)
+        y_seq = jnp.concatenate(ys, axis=1)
+        assert jnp.allclose(y_c4.astype(jnp.float32),
+                            y_seq.astype(jnp.float32), atol=0.05), \
+            float(jnp.max(jnp.abs(y_c4.astype(jnp.float32)
+                                  - y_seq.astype(jnp.float32))))
+
+
+class TestMoEDispatchEquivalence:
+    """gather dispatch == einsum dispatch at ample capacity (perf lever
+    correctness; EXPERIMENTS.md §Perf Cell A)."""
+
+    def test_equivalent(self):
+        from repro.models import common as cm
+        p = cm.init_moe(jax.random.PRNGKey(0), 16, 32, n_experts=4, n_shared=0)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16),
+                              jnp.float32).astype(jnp.bfloat16)
+        old = cm.MOE_DISPATCH
+        try:
+            cm.MOE_DISPATCH = "einsum"
+            y1 = cm.moe_ffn(p, x, top_k=2, capacity_factor=4.0)
+            cm.MOE_DISPATCH = "gather"
+            y2 = cm.moe_ffn(p, x, top_k=2, capacity_factor=4.0)
+        finally:
+            cm.MOE_DISPATCH = old
+        assert jnp.allclose(y1.astype(jnp.float32), y2.astype(jnp.float32),
+                            atol=0.05)
+
+
+class TestKVCacheInt8:
+    """int8 KV cache decode stays close to bf16 decode (perf lever)."""
+
+    def test_decode_close(self):
+        from repro.models import transformer as tfm
+        cfg = get_config("stablelm-1.6b").reduced()
+        params = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                                  cfg.vocab_size)
+        old = tfm.KV_CACHE_DTYPE
+        try:
+            tfm.KV_CACHE_DTYPE = jnp.bfloat16
+            _, c1 = tfm.prefill(params, cfg, toks[:, :5], max_len=6)
+            l1, _ = tfm.decode_step(params, cfg, c1, toks[:, 5:6])
+            tfm.KV_CACHE_DTYPE = jnp.int8
+            _, c2 = tfm.prefill(params, cfg, toks[:, :5], max_len=6)
+            assert c2["attn"]["k"].dtype == jnp.int8
+            l2, _ = tfm.decode_step(params, cfg, c2, toks[:, 5:6])
+        finally:
+            tfm.KV_CACHE_DTYPE = old
+        # int8 cache is lossy but should track closely at this scale
+        diff = jnp.max(jnp.abs(l1.astype(jnp.float32) - l2.astype(jnp.float32)))
+        assert float(diff) < 1.0, float(diff)

@@ -1,0 +1,113 @@
+"""Quantization core: MMSE clipping, fixed point, triples — unit +
+hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+
+arrays = st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                  min_size=8, max_size=64).map(
+    lambda xs: np.asarray(xs, np.float32))
+
+
+class TestIntQuant:
+    @pytest.mark.parametrize("bits,lo,hi", [(8, -128, 127), (4, -8, 7),
+                                            (2, -2, 1)])
+    def test_paper_ranges(self, bits, lo, hi):
+        assert Q.INT_RANGES[bits] == (lo, hi)
+
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_grid(self, bits):
+        x = jnp.linspace(-3, 3, 101)
+        q = Q.quantize_int(x, bits, clip=2.0)
+        scale = 2.0 / Q.INT_RANGES[bits][1]
+        codes = np.asarray(q) / scale
+        assert np.allclose(codes, np.round(codes), atol=1e-5)
+        lo, hi = Q.INT_RANGES[bits]
+        assert codes.min() >= lo and codes.max() <= hi
+
+    @given(arrays, st.sampled_from([2, 4, 8]))
+    @settings(max_examples=30, deadline=None)
+    def test_idempotent(self, x, bits):
+        clip = float(np.abs(x).max()) or 1.0
+        q1 = np.asarray(Q.quantize_int(jnp.asarray(x), bits, clip))
+        q2 = np.asarray(Q.quantize_int(jnp.asarray(q1), bits, clip))
+        assert np.allclose(q1, q2, atol=1e-6)
+
+
+class TestMMSE:
+    @given(arrays, st.sampled_from([2, 4, 8]))
+    @settings(max_examples=20, deadline=None)
+    def test_no_worse_than_absmax(self, x, bits):
+        """MMSE-chosen clip has MSE <= clipping at the raw abs-max."""
+        if np.abs(x).max() == 0:
+            return
+        c = Q.mmse_clip(x, bits)
+        def mse(clip):
+            q = np.asarray(Q.quantize_int(jnp.asarray(x), bits, clip))
+            return float(np.mean((x - q) ** 2))
+        assert mse(c) <= mse(float(np.abs(x).max())) + 1e-9
+
+    def test_outlier_clipping(self):
+        """A mild outlier (whose energy does NOT dominate) gets clipped;
+        note a huge outlier is correctly kept by MMSE because its miss cost
+        exceeds the grid-coarseness cost over the bulk."""
+        rng = np.random.default_rng(0)
+        x = rng.normal(0, 1, 4096).astype(np.float32)
+        x[0] = 8.0
+        c = Q.mmse_clip(x, 4)
+        assert c < 7.0
+
+
+class TestFixedPoint16:
+    @given(arrays)
+    @settings(max_examples=20, deadline=None)
+    def test_small_error(self, x):
+        if np.abs(x).max() == 0:
+            return
+        q = np.asarray(Q.fixed_point_16(jnp.asarray(x)))
+        # 16-bit fixed point with range-sized integer bits: tiny rel error
+        scale = max(np.abs(x).max(), 1e-9)
+        assert np.max(np.abs(q - x)) / scale < 2e-4
+
+    def test_triple_matches(self):
+        x = np.asarray([0.5, -1.5, 3.2], np.float32)
+        scale, lo, hi = Q.quant_triple(16, float(np.abs(x).max()))
+        q1 = np.asarray(Q.fixed_point_16(jnp.asarray(x)))
+        q2 = np.asarray(Q.fake_quant_triple(jnp.asarray(x), scale, lo, hi,
+                                            use_ste=False))
+        assert np.allclose(q1, q2, atol=1e-6)
+
+
+class TestTriples:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_triple_equals_quantize_int(self, bits):
+        x = jnp.linspace(-2, 2, 57)
+        clip = 1.3
+        scale, lo, hi = Q.quant_triple(bits, clip)
+        a = Q.quantize_int(x, bits, clip)
+        b = Q.fake_quant_triple(x, scale, lo, hi, use_ste=False)
+        assert jnp.allclose(a, b, atol=1e-6)
+
+    def test_ste_gradient_is_identity(self):
+        g = jax.grad(lambda x: jnp.sum(
+            Q.fake_quant_triple(x, 0.1, -8, 7)))(jnp.ones(4) * 0.33)
+        assert jnp.allclose(g, 1.0)
+
+
+class TestCompression:
+    def test_compressed_bits(self):
+        lw = {"a": 100, "b": 300}
+        bits = {"a": 4, "b": 2}
+        assert Q.compressed_bits(lw, bits, vector_weights=10) == \
+            100 * 4 + 300 * 2 + 10 * 16
+
+    @given(st.integers(2, 8).filter(lambda b: b in (2, 4, 8)))
+    @settings(max_examples=10, deadline=None)
+    def test_uniform_ratio(self, bits):
+        lw = {"a": 1000, "b": 2000}
+        cr = Q.compression_ratio(lw, {"a": bits, "b": bits})
+        assert cr == pytest.approx(32 / bits)

@@ -1,0 +1,125 @@
+"""HLO analyzer: while-trip correction, dot flops, collective cost model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_analysis as H
+
+
+def compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+class TestDotFlops:
+    def test_plain_matmul(self):
+        a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+        txt = compile_text(lambda x, y: x @ y, a, b)
+        rc = H.analyze_hlo(txt, 1)
+        assert rc.flops == 2 * 64 * 128 * 32
+
+    def test_scan_trip_multiplication(self):
+        """cost_analysis counts a scan body once; the analyzer multiplies."""
+        L, D = 7, 32
+        w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+        x = jax.ShapeDtypeStruct((4, D), jnp.float32)
+
+        def f(w, x):
+            def body(h, wi):
+                return jnp.tanh(h @ wi), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h
+        txt = compile_text(f, w, x)
+        rc = H.analyze_hlo(txt, 1)
+        expect = 2 * 4 * D * D * L
+        assert rc.flops == pytest.approx(expect, rel=0.01), \
+            (rc.flops, expect)
+
+    def test_nested_scan(self):
+        G, P, D = 3, 5, 16
+        w = jax.ShapeDtypeStruct((G, P, D, D), jnp.float32)
+        x = jax.ShapeDtypeStruct((2, D), jnp.float32)
+
+        def f(w, x):
+            def outer(h, wg):
+                def inner(h2, wi):
+                    return jnp.tanh(h2 @ wi), None
+                h, _ = jax.lax.scan(inner, h, wg)
+                return h, None
+            h, _ = jax.lax.scan(outer, x, w)
+            return h
+        txt = compile_text(f, w, x)
+        rc = H.analyze_hlo(txt, 1)
+        expect = 2 * 2 * D * D * G * P
+        assert rc.flops == pytest.approx(expect, rel=0.01)
+
+    def test_scan_stacking_bytes_not_full_buffer(self):
+        """ys-stacking DUS must be charged per-slice, not per-buffer."""
+        L, D = 64, 128
+        x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+
+        def f(x):
+            def body(h, _):
+                h = jnp.tanh(h)
+                return h, h
+            _, ys = jax.lax.scan(body, x, None, length=L)
+            return ys
+        txt = compile_text(f, x)
+        rc = H.analyze_hlo(txt, 1)
+        slice_bytes = D * D * 4
+        # generous bound: a few x (read + write) per trip, NOT L x buffer
+        assert rc.hbm_bytes < 8 * slice_bytes * L, rc.hbm_bytes
+
+
+class TestParser:
+    def test_while_trip_count(self):
+        comp = H.Computation("cond", False)
+        comp.instrs["c"] = H.Instr("c", "s32[]", "constant", "42)")
+        comp.instrs["lt"] = H.Instr("lt", "pred[]", "compare",
+                                    "%a, %c), direction=LT")
+        assert H._while_trip_count(comp) == 42
+
+    def test_shape_bytes(self):
+        assert H._shape_bytes("bf16[4,8]") == 64
+        assert H._shape_bytes("(f32[2,2], s8[4])") == 20
+        assert H._shape_bytes("f32[]") == 4
+
+    def test_operands_nested_parens(self):
+        ins = H.Instr("x", "f32[2]", "add", "%a, %b), metadata={op_name=\"f(g)\"}")
+        assert ins.operands() == ["a", "b"]
+
+
+class TestCollectiveModel:
+    def make(self, op, spec, groups="{{0,1,2,3}}"):
+        comp = H.Computation("main", True)
+        comp.instrs["src"] = H.Instr("src", spec, "parameter", "0)")
+        comp.instrs["c"] = H.Instr(
+            "c", spec, op, f"%src), replica_groups={groups}")
+        return comp
+
+    def test_all_reduce_ring(self):
+        comp = self.make("all-reduce", "f32[100]")
+        ins = comp.instrs["c"]
+        b = H._collective_ici_bytes(
+            ins, lambda n: comp.instrs[n].spec if n in comp.instrs else None, 4)
+        assert b == int(2 * 400 * 3 / 4)
+
+    def test_all_gather_ring(self):
+        comp = self.make("all-gather", "f32[100]")
+        ins = comp.instrs["c"]
+        b = H._collective_ici_bytes(
+            ins, lambda n: comp.instrs[n].spec if n in comp.instrs else None, 4)
+        assert b == 400 * 3
+
+    def test_iota_replica_groups(self):
+        comp = self.make("all-reduce", "f32[64]", groups="[32,16]<=[512]")
+        ins = comp.instrs["c"]
+        assert H._group_size(ins, 512) == 16
+
+    def test_permute_bytes(self):
+        comp = self.make("collective-permute", "bf16[128]")
+        ins = comp.instrs["c"]
+        b = H._collective_ici_bytes(
+            ins, lambda n: comp.instrs[n].spec if n in comp.instrs else None, 4)
+        assert b == 256

@@ -1,0 +1,96 @@
+"""SRU speech model: structure, quantized path, calibration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import sru
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = sru.SRUModelConfig(input_dim=8, hidden=16, proj=8,
+                             n_sru_layers=3, n_outputs=10)
+    params = sru.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+class TestStructure:
+    def test_eight_quantizable_layers(self):
+        assert sru.LAYER_NAMES == ("L0", "Pr1", "L1", "Pr2", "L2", "Pr3",
+                                   "L3", "FC")
+
+    def test_forward_shape(self, small):
+        cfg, params = small
+        feats = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 8))
+        y = sru.forward(params, cfg, feats)
+        assert y.shape == (2, 9, 10)
+        assert jnp.isfinite(y).all()
+
+    def test_bidirectional_uses_future(self, small):
+        """Changing a future frame must change past outputs (Bi-SRU)."""
+        cfg, params = small
+        feats = jax.random.normal(jax.random.PRNGKey(1), (1, 9, 8))
+        y1 = sru.forward(params, cfg, feats)
+        feats2 = feats.at[0, -1].add(10.0)
+        y2 = sru.forward(params, cfg, feats2)
+        assert not jnp.allclose(y1[0, 0], y2[0, 0])
+
+
+class TestQuantizedPath:
+    def test_qspec_runs_and_differs(self, small):
+        cfg, params = small
+        feats = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 8))
+        base = sru.forward(params, cfg, feats)
+        alloc = {n: (2, 8) for n in cfg.layer_names()}
+        q = sru.forward(params, cfg, feats, qspec=alloc)
+        assert jnp.isfinite(q).all()
+        assert not jnp.allclose(base, q)
+
+    def test_qp_triple_path_matches_qspec(self, small):
+        cfg, params = small
+        feats = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 8))
+        names = cfg.layer_names()
+        alloc = {n: (4, 8) for n in names}
+        clips = sru.weight_clips(params, cfg, {n: 4 for n in names})
+        ranges = sru.calibrate(params, cfg, [feats])
+        wr = sru.weight_ranges(params, cfg)
+        wclips = {(n, 4): c for n, c in clips.items()}
+        qp = sru.quant_triples_for(alloc, wclips, ranges, wr)
+        y_qspec = sru.forward(params, cfg, feats, qspec=alloc, wclips=clips,
+                              act_ranges=ranges)
+        y_qp = sru.forward(params, cfg, feats, qp=qp)
+        np.testing.assert_allclose(np.asarray(y_qp), np.asarray(y_qspec),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_16bit_near_lossless(self, small):
+        cfg, params = small
+        feats = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 8))
+        base = sru.forward(params, cfg, feats)
+        alloc = {n: (16, 16) for n in cfg.layer_names()}
+        ranges = sru.calibrate(params, cfg, [feats])
+        q = sru.forward(params, cfg, feats, qspec=alloc, act_ranges=ranges)
+        assert float(jnp.max(jnp.abs(base - q))) < 0.05
+
+    def test_monotone_degradation_trend(self, small):
+        """2-bit should distort outputs at least as much as 8-bit."""
+        cfg, params = small
+        feats = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 8))
+        base = sru.forward(params, cfg, feats)
+        ranges = sru.calibrate(params, cfg, [feats])
+        errs = {}
+        for bits in (8, 2):
+            alloc = {n: (bits, 16) for n in cfg.layer_names()}
+            q = sru.forward(params, cfg, feats, qspec=alloc, act_ranges=ranges)
+            errs[bits] = float(jnp.mean(jnp.abs(base - q)))
+        assert errs[2] > errs[8]
+
+
+class TestCalibration:
+    def test_median_of_ranges(self):
+        from repro.core.quantization import ActRangeCalibrator
+        cal = ActRangeCalibrator()
+        for v in (1.0, 5.0, 2.0):
+            cal.observe("x", jnp.asarray([v]))
+        assert cal.expected_ranges()["x"] == 2.0

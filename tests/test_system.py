@@ -1,0 +1,71 @@
+"""End-to-end behaviour tests: training improves loss; the MOHAQ search
+produces a feasible non-dominated Pareto set whose hardware numbers are
+internally consistent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sru_experiment as X
+from repro.core.nsga2 import pareto_front
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return X.train_small_sru(steps=120)
+
+
+@pytest.mark.slow
+class TestEndToEnd:
+    def test_training_learns(self, trained):
+        # far better than chance (n_outputs classes)
+        chance = 100.0 * (1 - 1.0 / trained.cfg.n_outputs)
+        assert trained.baseline_val_error < chance - 10
+
+    def test_quantization_degrades_gracefully(self, trained):
+        from repro.models.sru import LAYER_NAMES
+        e8 = trained.val_error({n: (8, 16) for n in LAYER_NAMES})
+        e2 = trained.val_error({n: (2, 8) for n in LAYER_NAMES})
+        assert e8 <= trained.baseline_val_error + 2.0   # 8-bit ~ lossless
+        assert e2 >= e8                                 # 2-bit worse
+
+    def test_inference_only_search(self, trained):
+        res = X.experiment1_memory(trained, generations=3, pop=8, initial=12)
+        rows = X.result_table(res, trained, with_test=False)
+        assert len(rows) >= 1
+        objs = np.asarray([[r["error"], r["memory"]] for r in rows])
+        # returned set is mutually non-dominated
+        assert len(pareto_front(objs)) == len(objs)
+        for r in rows:
+            assert r["error"] <= trained.baseline_val_error + 8.0 + 1e-9
+
+    def test_silago_search_objective_consistency(self, trained):
+        res = X.experiment2_silago(trained, generations=3, pop=8, initial=12)
+        for r in res.rows():
+            # SiLago ties W and A precision
+            for wb, ab in r["alloc"].values():
+                assert wb == ab
+            assert 1.0 <= r["speedup"] <= 4.0
+
+    def test_beacon_search_runs(self, trained):
+        res, bs = X.experiment3_bitfusion(
+            trained, generations=2, pop=6, initial=8, beacon=True,
+            retrain_steps=10)
+        assert bs is not None
+        rows = res.rows()
+        assert len(rows) >= 1
+
+
+class TestTrainerDriver:
+    def test_lm_trainer_resume(self, tmp_path):
+        from repro.launch import train as T
+        args = ["--arch", "stablelm-1.6b", "--reduced", "--steps", "6",
+                "--batch", "2", "--seq", "16", "--ckpt-dir", str(tmp_path),
+                "--ckpt-every", "3", "--log-every", "3"]
+        T.main(args)
+        from repro.training import checkpoint as ckpt
+        assert ckpt.latest_step(str(tmp_path)) == 6
+        # resume: runs steps 7..8 from the checkpoint
+        resumed = list(args)
+        resumed[resumed.index("--steps") + 1] = "8"
+        T.main(resumed)

@@ -1,0 +1,175 @@
+"""Optimizer, schedules, checkpointing, data determinism, grad compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.training import checkpoint as ckpt
+from repro.training import grad_compress as gc
+from repro.training import optimizer as opt
+
+
+class TestAdamW:
+    def test_converges_quadratic(self):
+        ocfg = opt.AdamWConfig(lr=0.1, schedule="constant", warmup_steps=1,
+                               weight_decay=0.0, grad_clip=0)
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = opt.init_opt_state(params)
+        loss = lambda p: jnp.sum(p["w"] ** 2)
+        for _ in range(120):
+            g = jax.grad(loss)(params)
+            params, state, _ = opt.adamw_update(ocfg, params, g, state)
+        assert float(loss(params)) < 1e-3
+
+    def test_grad_clip(self):
+        ocfg = opt.AdamWConfig(lr=0.0, grad_clip=1.0)
+        params = {"w": jnp.ones(3)}
+        state = opt.init_opt_state(params)
+        g = {"w": jnp.ones(3) * 100}
+        _, _, metrics = opt.adamw_update(ocfg, params, g, state)
+        assert float(metrics["grad_norm"]) > 100
+
+
+class TestSchedules:
+    def test_warmup_monotone(self):
+        ocfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        lrs = [float(opt.schedule_lr(ocfg, jnp.asarray(s)))
+               for s in range(11)]
+        assert all(b >= a for a, b in zip(lrs, lrs[1:]))
+        # warmup complete at step 10 (cosine already at cos(0.1*pi) factor)
+        assert lrs[10] == pytest.approx(0.5 * (1 + np.cos(np.pi * 0.1)),
+                                        rel=1e-4)
+
+    def test_wsd_plateau_then_decay(self):
+        ocfg = opt.AdamWConfig(lr=1.0, schedule="wsd", warmup_steps=10,
+                               total_steps=100, decay_frac=0.2)
+        mid = float(opt.schedule_lr(ocfg, jnp.asarray(50)))
+        end = float(opt.schedule_lr(ocfg, jnp.asarray(100)))
+        assert mid == pytest.approx(1.0, rel=0.02)   # stable phase
+        assert end == pytest.approx(0.1, rel=0.05)   # decayed to 10%
+
+    def test_cosine_end(self):
+        ocfg = opt.AdamWConfig(lr=1.0, schedule="cosine", warmup_steps=1,
+                               total_steps=100)
+        assert float(opt.schedule_lr(ocfg, jnp.asarray(100))) < 1e-6
+
+
+class TestCheckpoint:
+    def tree(self, seed=0):
+        k = jax.random.PRNGKey(seed)
+        return {"a": jax.random.normal(k, (4, 3)),
+                "b": {"c": jnp.arange(5), "d": jnp.float32(2.5)}}
+
+    def test_roundtrip(self, tmp_path):
+        t = self.tree()
+        ckpt.save(str(tmp_path), 7, t)
+        restored, step = ckpt.restore(str(tmp_path), t)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_k_gc(self, tmp_path):
+        t = self.tree()
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(str(tmp_path), s, t, keep=2)
+        steps = sorted(d for d in os.listdir(tmp_path))
+        assert steps == ["step_00000004", "step_00000005"]
+
+    def test_latest_and_resume(self, tmp_path):
+        t = self.tree()
+        ckpt.save(str(tmp_path), 3, t)
+        ckpt.save(str(tmp_path), 9, self.tree(1))
+        assert ckpt.latest_step(str(tmp_path)) == 9
+        restored, step = ckpt.restore(str(tmp_path), t)
+        assert step == 9
+
+    def test_async_supersede(self, tmp_path):
+        t = self.tree()
+        ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=5)
+        for s in range(1, 6):
+            ac.save(s, t)
+        ac.wait()
+        assert ckpt.latest_step(str(tmp_path)) == 5
+
+    def test_atomicity_no_tmp_left(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, self.tree())
+        assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+    def test_restore_with_shardings(self, tmp_path):
+        """Elastic path: restore onto explicit (trivial) shardings."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((1,), ("data",))
+        t = self.tree()
+        ckpt.save(str(tmp_path), 1, t)
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+        restored, _ = ckpt.restore(str(tmp_path), t, shardings=sh)
+        assert restored["b"]["c"].sharding == NamedSharding(mesh, P())
+
+
+class TestDataDeterminism:
+    def test_lm_batch_reproducible(self):
+        a = synthetic.lm_batch(100, 4, 16, seed=1, step=5)
+        b = synthetic.lm_batch(100, 4, 16, seed=1, step=5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_steps_differ(self):
+        a = synthetic.lm_batch(100, 4, 16, seed=1, step=5)
+        b = synthetic.lm_batch(100, 4, 16, seed=1, step=6)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_hosts_differ(self):
+        a = synthetic.lm_batch(100, 4, 16, seed=1, step=5, host=0)
+        b = synthetic.lm_batch(100, 4, 16, seed=1, step=5, host=1)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_resume_stream_identical(self):
+        it1 = synthetic.lm_batches(50, 2, 8, seed=3, start_step=0)
+        for _ in range(4):
+            last = next(it1)
+        it2 = synthetic.lm_batches(50, 2, 8, seed=3, start_step=3)
+        np.testing.assert_array_equal(last["tokens"], next(it2)["tokens"])
+
+    def test_speech_labels_learnable_structure(self):
+        task = synthetic.SpeechTask(n_states=16)
+        b = synthetic.speech_batch(task, 4, 32)
+        # labels cover multiple classes, not constant
+        assert len(np.unique(np.asarray(b["labels"]))) > 3
+
+
+class TestGradCompression:
+    def test_error_feedback_unbiased_over_time(self):
+        """Sum of compressed grads ~ sum of true grads (error feedback)."""
+        rng = np.random.default_rng(0)
+        grads = [{"w": jnp.asarray(rng.normal(0, 1, (8, 8)), jnp.float32)}
+                 for _ in range(30)]
+        err = gc.init_error_state(grads[0])
+        total_c = jnp.zeros((8, 8))
+        for g in grads:
+            dq, err = gc.compress_grads(g, err)
+            total_c = total_c + dq["w"]
+        total_t = sum(g["w"] for g in grads)
+        resid = float(jnp.max(jnp.abs(total_c + err["w"] - total_t)))
+        assert resid < 1e-3
+
+    def test_int8_codes(self):
+        g = {"w": jnp.asarray([[1.0, -3.0], [0.5, 2.0]])}
+        q, scale, err = gc.quantize_leaf(g["w"], jnp.zeros((2, 2)))
+        assert q.dtype == jnp.int8
+        assert float(jnp.max(jnp.abs(
+            gc.dequantize_leaf(q, scale) + err - g["w"]))) < 1e-6
+
+    def test_training_with_compression_converges(self):
+        ocfg = opt.AdamWConfig(lr=0.1, schedule="constant", warmup_steps=1,
+                               weight_decay=0.0, grad_clip=0)
+        params = {"w": jnp.asarray([4.0, -3.0])}
+        state = opt.init_opt_state(params)
+        err = gc.init_error_state(params)
+        loss = lambda p: jnp.sum(p["w"] ** 2)
+        for _ in range(150):
+            g = jax.grad(loss)(params)
+            g, err = gc.compress_grads(g, err)
+            params, state, _ = opt.adamw_update(ocfg, params, g, state)
+        assert float(loss(params)) < 1e-2

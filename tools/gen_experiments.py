@@ -1,0 +1,43 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run JSON artifacts. The narrative sections (§Perf) are maintained by
+hand; this script rewrites only the marked blocks.
+
+  PYTHONPATH=src python tools/gen_experiments.py
+"""
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, "src")
+from repro.roofline.tables import dryrun_md, load_cells, roofline_md  # noqa: E402
+
+
+def main():
+    single = load_cells(mesh="single")
+    multi = load_cells(mesh="multi")
+    blocks = {
+        "ROOFLINE_SINGLE": roofline_md(single),
+        "DRYRUN_MULTI": dryrun_md(multi),
+        "DRYRUN_SINGLE": dryrun_md(single),
+    }
+    path = "EXPERIMENTS.md"
+    text = open(path).read() if os.path.exists(path) else ""
+    for key, content in blocks.items():
+        begin, end = f"<!-- BEGIN {key} -->", f"<!-- END {key} -->"
+        if begin in text:
+            text = re.sub(
+                re.escape(begin) + r".*?" + re.escape(end),
+                begin + "\n" + content + "\n" + end, text, flags=re.S)
+        else:
+            print(f"[gen] marker {key} missing, skipped")
+    open(path, "w").write(text)
+    ok = sum(1 for d in single + multi if d["status"] == "ok")
+    skip = sum(1 for d in single + multi if d["status"] == "skip")
+    fail = sum(1 for d in single + multi if d["status"] not in ("ok", "skip"))
+    print(f"[gen] cells ok={ok} skip={skip} fail={fail}")
+
+
+if __name__ == "__main__":
+    main()
