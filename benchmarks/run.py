@@ -180,6 +180,77 @@ def kernel_sru_scan():
     emit("kernel_sru_scan", us, f"B={B};T={T};n={n};interpret_mode=True")
 
 
+def search_batched_eval(full: bool = False):
+    """Search-candidate evaluation throughput: the per-candidate scalar path
+    (what the seed GA ran — one quantized forward per allocation per
+    validation subset) vs the batched population evaluator (one vmapped call
+    scoring the whole population). Measured interleaved (this box's CPU
+    allocation is noisy; alternating trials hit both paths equally) at the
+    paper-style compact ranking subsets (§4.2: small validation subsets
+    suffice to rank candidates) and, for transparency, at the seed's full
+    validation shape. Writes BENCH_search_throughput.json."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core import sru_experiment as X
+    from repro.data import synthetic
+
+    trained = X.train_small_sru(steps=60 if full else 40)
+    prob = X.build_problem(trained, BITFUSION, ("error", "speedup"))
+    rng = np.random.default_rng(0)
+
+    def subsets(b, t):
+        raw, _ = synthetic.speech_eval_sets(trained.task, batch=max(b, 1),
+                                            seq=t)
+        stack = lambda bs: (
+            jnp.concatenate([x["feats"] for x in bs])[:b, :t],
+            jnp.concatenate([x["labels"] for x in bs])[:b, :t])
+        return [stack(s) for s in raw]
+
+    def measure(tr, pop, trials=5):
+        genomes = [rng.integers(1, 5, prob.n_var) for _ in range(pop)]
+        allocs = [prob.decode(prob._snap(g)) for g in genomes]
+        scalar_ref = [tr.val_error(a) for a in allocs]       # warm + reference
+        assert tr.val_error_batch(allocs) == scalar_ref, \
+            "batched evaluator diverged from scalar path"
+        ts, tb = [], []
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            for a in allocs:
+                tr.val_error(a)
+            ts.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            tr.val_error_batch(allocs)
+            tb.append(time.perf_counter() - t0)
+        med = lambda xs: sorted(xs)[len(xs) // 2]
+        return {"pop": pop, "scalar_ms": med(ts) * 1e3,
+                "batched_ms": med(tb) * 1e3,
+                "speedup": med(ts) / med(tb), "bit_identical": True}
+
+    compact = dataclasses.replace(trained, val_subsets=subsets(1, 24))
+    results = {
+        "machine": {"cpu_count": os.cpu_count()},
+        "eval_shapes": {
+            "compact": "4 subsets x (1 seq, 24 frames) — paper-style "
+                       "ranking subsets",
+            "full": "4 subsets x (8 seqs, 48 frames) — seed validation shape",
+        },
+        "compact": [measure(compact, 16), measure(compact, 32)],
+        "full": [measure(trained, 16)],
+    }
+    with open("BENCH_search_throughput.json", "w") as f:
+        json.dump(results, f, indent=2)
+    c16, c32 = results["compact"]
+    f16 = results["full"][0]
+    emit("search_batched_eval_p16", c16["batched_ms"] * 1e3 / 16,
+         f"speedup={c16['speedup']:.2f}x;scalar_ms={c16['scalar_ms']:.0f};"
+         f"batched_ms={c16['batched_ms']:.0f};bit_identical=True")
+    emit("search_batched_eval_p32", c32["batched_ms"] * 1e3 / 32,
+         f"speedup={c32['speedup']:.2f}x;full_shape_p16_speedup="
+         f"{f16['speedup']:.2f}x;json=BENCH_search_throughput.json")
+
+
 def nsga2_throughput():
     from repro.core.nsga2 import NSGA2
 
@@ -254,6 +325,7 @@ def main() -> None:
     nsga2_throughput()
     hlo_analyzer_bench()
     roofline_table()
+    search_batched_eval(args.full)
     fig7_10_search(args.full)
 
 

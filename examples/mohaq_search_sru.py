@@ -20,24 +20,34 @@ def main():
                     help="fewer generations / training steps")
     ap.add_argument("--train-steps", type=int, default=None)
     ap.add_argument("--generations", type=int, default=None)
+    ap.add_argument("--scalar", action="store_true",
+                    help="force per-candidate evaluation (the batched "
+                         "population evaluator is the default and returns "
+                         "the identical Pareto front)")
     args = ap.parse_args()
     gens = args.generations or (6 if args.fast else 20)
     steps = args.train_steps or (150 if args.fast else 500)
+    batched = not args.scalar
 
     t0 = time.time()
     print(f"[1/4] training SRU speech model ({steps} steps)...")
     trained = X.train_small_sru(steps=steps, verbose=True)
     print(f"  baseline: val {trained.baseline_val_error:.1f}% "
           f"test {trained.baseline_test_error:.1f}%  ({time.time()-t0:.0f}s)")
+    print(f"  candidate evaluation: "
+          f"{'batched (one vmapped call per generation)' if batched else 'per-candidate scalar'}")
 
     print(f"\n[2/4] experiment 1 — (error, memory), {gens} generations")
-    res1 = X.experiment1_memory(trained, generations=gens,
+    t1 = time.time()
+    res1 = X.experiment1_memory(trained, generations=gens, batched=batched,
                                 log=lambda m: print("   ", m))
+    print(f"  {res1.n_evals} candidate evals in {time.time()-t1:.1f}s "
+          f"({(time.time()-t1)/max(res1.n_evals,1)*1e3:.0f} ms/eval)")
     rows = X.result_table(res1, trained)
     print(X.format_rows(rows))
 
     print(f"\n[3/4] experiment 2 — SiLago (error, speedup, energy)")
-    res2 = X.experiment2_silago(trained, generations=gens,
+    res2 = X.experiment2_silago(trained, generations=gens, batched=batched,
                                 log=lambda m: print("   ", m))
     rows2 = X.result_table(res2, trained)
     print(X.format_rows(rows2))
@@ -46,7 +56,8 @@ def main():
           f"({100*best/3.947:.0f}% of the all-4-bit bound)")
 
     print(f"\n[4/4] experiment 3 — Bitfusion 10.6x-SRAM bound")
-    res3, _ = X.experiment3_bitfusion(trained, generations=gens)
+    res3, _ = X.experiment3_bitfusion(trained, generations=gens,
+                                      batched=batched)
     rows3 = X.result_table(res3, trained)
     print("  inference-only search:")
     print(X.format_rows(rows3))

@@ -1,0 +1,123 @@
+"""Batched candidate evaluation for the MOHAQ search (GA hot loop).
+
+The inference-only search scores each GA candidate with a full quantized
+forward pass; the paper's settings (60 generations x 10 individuals, 40 in
+generation 0) pay for hundreds of *serial* model evaluations. Because every
+menu precision is already expressed as a dynamic (scale, lo, hi) triple
+(``quantization.quant_triple`` — one jitted forward serves every allocation),
+an entire population batches for free: stack the per-layer triples of P
+candidates into a (P, L, 6) array and ``jax.vmap`` the quantized forward over
+the population axis. One jitted call then scores P candidates — the MxV
+einsums become single P-wide matmuls and the per-call dispatch overhead is
+paid once instead of P times.
+
+Population sizes are padded up to fixed buckets so the jitted evaluator
+compiles once per bucket, not once per population size.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Alloc = Dict[str, Tuple[int, int]]
+
+# population-size buckets the batched forward is compiled for; sizes above
+# the largest bucket round up to a multiple of it
+_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def bucket_size(p: int) -> int:
+    """Smallest compile bucket holding a population of ``p`` candidates."""
+    for b in _BUCKETS:
+        if p <= b:
+            return b
+    top = _BUCKETS[-1]
+    return ((p + top - 1) // top) * top
+
+
+def stack_qps(qp_list: Sequence[Dict[str, tuple]],
+              layer_names: Sequence[str]) -> np.ndarray:
+    """Stack per-candidate quantization-parameter dicts
+    ({name: (w_scale, w_lo, w_hi, a_scale, a_lo, a_hi)}, as produced by
+    ``sru.quant_triples_for``) into a (P, L, 6) float32 array in
+    ``layer_names`` order — the population axis the batched forward vmaps
+    over."""
+    arr = np.empty((len(qp_list), len(layer_names), 6), np.float32)
+    for p, qp in enumerate(qp_list):
+        for i, name in enumerate(layer_names):
+            arr[p, i, :] = qp[name]
+    return arr
+
+
+class BatchedSRUEvaluator:
+    """Scores whole populations of allocations against the validation
+    subsets with one jitted vmapped forward per subset.
+
+    ``make_qp``: Alloc -> {layer: 6-float grid} (numpy, per candidate —
+    cheap; the jitted forward never recompiles across allocations).
+    Error convention matches ``TrainedSRU.val_error``: per candidate, the
+    MAX frame-error % over the validation subsets (paper §4.2).
+    """
+
+    def __init__(self, cfg, val_subsets, make_qp: Callable[[Alloc], dict],
+                 use_kernel: bool = False):
+        from repro.models import sru
+
+        self.cfg = cfg
+        self.layer_names = list(cfg.layer_names())
+        self.val_subsets = val_subsets
+        self.make_qp = make_qp
+        # equal-shaped subsets additionally fold into the batch axis, so the
+        # whole validation sweep is ONE call instead of one per subset
+        shapes = {tuple(np.asarray(f).shape) for f, _ in val_subsets}
+        self._folded = len(shapes) == 1 and len(val_subsets) > 1
+        if self._folded:
+            self._feats_all = jnp.concatenate(
+                [f for f, _ in val_subsets], axis=0)
+            self._labels_all = jnp.concatenate(
+                [l for _, l in val_subsets], axis=0)
+            self._n_subsets = len(val_subsets)
+            self._subset_frames = int(np.asarray(val_subsets[0][1]).size)
+
+        n_sub = len(val_subsets)
+
+        @jax.jit
+        def _batch_err(params, feats, labels, qp_stack):
+            logits = sru.forward_population(params, cfg, feats, qp_stack,
+                                            use_kernel=use_kernel)
+            wrong = jnp.argmax(logits, -1) != labels[None]  # (P, B*, T)
+            if self._folded:
+                p, _, t = wrong.shape
+                return jnp.sum(wrong.reshape(p, n_sub, -1, t), axis=(2, 3))
+            return jnp.sum(wrong, axis=(1, 2))
+
+        self._batch_err = _batch_err
+
+    def _stack(self, allocs: Sequence[Alloc]) -> np.ndarray:
+        qps = [self.make_qp(a) for a in allocs]
+        stack = stack_qps(qps, self.layer_names)
+        pad = bucket_size(len(allocs)) - len(allocs)
+        if pad:
+            stack = np.concatenate([stack, np.repeat(stack[-1:], pad, 0)])
+        return stack
+
+    def errors(self, allocs: Sequence[Alloc], params) -> List[float]:
+        """Max-over-subsets error % for each allocation (order-preserving)."""
+        if not allocs:
+            return []
+        stack = self._stack(allocs)
+        p = len(allocs)
+        if self._folded:
+            wrong = np.asarray(self._batch_err(
+                params, self._feats_all, self._labels_all, stack))  # (P, S)
+            errs = 100.0 * wrong[:p].astype(np.int64) / self._subset_frames
+            return np.max(errs, axis=1).tolist()
+        per_subset = []
+        for feats, labels in self.val_subsets:
+            wrong = np.asarray(self._batch_err(params, feats, labels, stack))
+            per_subset.append(100.0 * wrong[:p].astype(np.int64)
+                              / int(np.asarray(labels).size))
+        return np.max(np.stack(per_subset), axis=0).tolist()

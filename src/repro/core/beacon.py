@@ -78,6 +78,12 @@ class BeaconSearch:
                                       alloc)
 
     def attach(self) -> MOHAQProblem:
-        """Return the problem with its error_fn re-pointed at beacon logic."""
+        """Return the problem with its error_fn re-pointed at beacon logic.
+
+        The batched population evaluator is detached: beacon routing picks
+        per-candidate parameter sets (nearest beacon, possibly retraining
+        mid-evaluation), which a single shared-params vmap cannot express.
+        """
         self.problem.error_fn = self.error_fn
+        self.problem.batch_error_fn = None
         return self.problem

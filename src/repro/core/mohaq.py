@@ -33,6 +33,12 @@ class MOHAQProblem:
     hardware: HardwareModel
     error_fn: Callable[[Alloc], float]        # -> error % (lower better)
     baseline_error: float
+    # optional vectorized error evaluator: list of allocs -> list of error %
+    # (one vmapped forward scoring the whole population, see batched_eval).
+    # Must agree with error_fn exactly; only memory-feasible candidates are
+    # passed, so infeasible genomes never occupy a vmap lane.
+    batch_error_fn: Optional[Callable[[Sequence[Alloc]],
+                                      Sequence[float]]] = None
     fixed_ops: int = 0            # element-wise + nonlinear ops, always 16-bit
     objectives: Sequence[str] = ("error", "speedup", "energy")
     feasible_error_margin: float = 8.0        # paper: baseline + 8 pp
@@ -83,26 +89,63 @@ class MOHAQProblem:
         out["compression"] = n_mat * self.base_bits / mat_bits
         return out
 
-    def evaluate(self, genome: np.ndarray) -> Tuple[List[float], float]:
-        # snap genes to the supported menu
-        genome = np.asarray([min(self.codes, key=lambda c: abs(c - g))
-                             for g in genome])
-        alloc = self.decode(genome)
+    def _snap(self, genome: np.ndarray) -> np.ndarray:
+        """Snap genes to the supported precision menu."""
+        return np.asarray([min(self.codes, key=lambda c: abs(c - g))
+                           for g in genome])
+
+    def _screen(self, genome: np.ndarray):
+        """Constraint screening shared by the scalar and batched paths:
+        decode, check the SRAM bound. Returns (alloc, mem_violation) where a
+        positive violation means the candidate must NOT reach the error
+        evaluator (its error is inf by convention)."""
+        alloc = self.decode(self._snap(genome))
         fits, size = self.hardware.model_fits(
             self.layer_weights, alloc, self.vector_weights)
-        violation = 0.0
-        if not fits:
-            violation += (size / self.hardware.sram_bytes) - 1.0
-            # infeasible in memory: skip the (costly) error eval
-            err = float("inf")
-            hw = self.hardware_objectives(alloc)
-            return self._pack(err, hw), violation
-        err = self.error_fn(alloc)
-        if err > self.baseline_error + self.feasible_error_margin:
+        if fits:
+            return alloc, 0.0
+        return alloc, (size / self.hardware.sram_bytes) - 1.0
+
+    def _finish(self, alloc: Alloc, err: float,
+                violation: float) -> Tuple[List[float], float]:
+        if np.isfinite(err) and \
+                err > self.baseline_error + self.feasible_error_margin:
             violation += (err - self.baseline_error
                           - self.feasible_error_margin) / 100.0
-        hw = self.hardware_objectives(alloc)
-        return self._pack(err, hw), violation
+        return self._pack(err, self.hardware_objectives(alloc)), violation
+
+    def evaluate(self, genome: np.ndarray) -> Tuple[List[float], float]:
+        alloc, violation = self._screen(genome)
+        if violation > 0.0:
+            # infeasible in memory: skip the (costly) error eval
+            return self._finish(alloc, float("inf"), violation)
+        return self._finish(alloc, self.error_fn(alloc), violation)
+
+    def evaluate_population(
+            self, genomes: Sequence[np.ndarray]
+    ) -> List[Tuple[List[float], float]]:
+        """Population-level evaluation: memory-infeasible genomes are
+        screened out first (they never occupy a vmap lane), then the
+        survivors are scored in ONE ``batch_error_fn`` call (scalar
+        ``error_fn`` loop when no batched evaluator is wired)."""
+        results: List[Optional[Tuple[List[float], float]]] = \
+            [None] * len(genomes)
+        pending: List[Tuple[int, Alloc]] = []
+        for i, genome in enumerate(genomes):
+            alloc, violation = self._screen(genome)
+            if violation > 0.0:
+                results[i] = self._finish(alloc, float("inf"), violation)
+            else:
+                pending.append((i, alloc))
+        if pending:
+            allocs = [a for _, a in pending]
+            if self.batch_error_fn is not None:
+                errs = list(self.batch_error_fn(allocs))
+            else:
+                errs = [self.error_fn(a) for a in allocs]
+            for (i, alloc), err in zip(pending, errs):
+                results[i] = self._finish(alloc, float(err), 0.0)
+        return results
 
     def _pack(self, err: float, hw: Dict[str, float]) -> List[float]:
         objs = []
@@ -135,13 +178,22 @@ class MOHAQResult:
 
 def run_search(problem: MOHAQProblem, *, n_generations: int = 60,
                pop_size: int = 10, initial_pop_size: int = 40,
-               seed: int = 0, log=None) -> MOHAQResult:
+               seed: int = 0, log=None,
+               batched: Optional[bool] = None) -> MOHAQResult:
     """Inference-only search (paper §4.2). 60 generations x 10 individuals
-    (40 in generation 0) — the paper's settings."""
+    (40 in generation 0) — the paper's settings.
+
+    ``batched=None`` (auto) scores each generation's candidates with one
+    vmapped forward whenever the problem has a ``batch_error_fn`` wired;
+    ``batched=False`` forces the per-candidate scalar path. Both paths visit
+    identical genomes and return the identical Pareto front."""
     codes = problem.codes
+    if batched is None:
+        batched = problem.batch_error_fn is not None
     ga = NSGA2(n_var=problem.n_var, var_lo=min(codes), var_hi=max(codes),
-               evaluate=problem.evaluate, pop_size=pop_size,
-               initial_pop_size=initial_pop_size,
+               evaluate=problem.evaluate,
+               evaluate_batch=problem.evaluate_population if batched else None,
+               pop_size=pop_size, initial_pop_size=initial_pop_size,
                n_generations=n_generations, seed=seed, log=log)
     pareto = ga.run()
     return MOHAQResult(problem, pareto, len(ga.history))

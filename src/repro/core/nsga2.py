@@ -97,11 +97,22 @@ def _tournament(rng, pop: List[Individual]) -> Individual:
 
 @dataclass
 class NSGA2:
-    """evaluate(genome) -> (objectives_to_minimize, constraint_violation)."""
+    """evaluate(genome) -> (objectives_to_minimize, constraint_violation).
+
+    ``evaluate_batch`` (optional) takes a list of genomes and returns the
+    matching list of (objectives, violation) pairs; when provided, each
+    generation's offspring (and the whole initial population) is scored in
+    one call — the hook for vectorized/vmapped candidate evaluation. Results
+    must match ``evaluate`` exactly: the GA's RNG stream never depends on
+    evaluation, so scalar and batched runs visit identical genomes and the
+    Pareto front is reproduced bit-for-bit.
+    """
     n_var: int
     var_lo: int
     var_hi: int
     evaluate: Callable[[np.ndarray], Tuple[Sequence[float], float]]
+    evaluate_batch: Optional[
+        Callable[[List[np.ndarray]], List[Tuple[Sequence[float], float]]]] = None
     pop_size: int = 10
     initial_pop_size: int = 40
     n_generations: int = 60
@@ -111,16 +122,35 @@ class NSGA2:
     log: Optional[Callable[[str], None]] = None
     history: List[Individual] = field(default_factory=list)
 
-    def _eval(self, genome: np.ndarray, cache: dict) -> Individual:
-        key = tuple(int(g) for g in genome)
-        if key in cache:
-            c = cache[key]
-            return Individual(genome.copy(), c.objectives.copy(), c.violation)
-        objs, viol = self.evaluate(genome)
-        ind = Individual(genome.copy(), np.asarray(objs, float), float(viol))
-        cache[key] = ind
-        self.history.append(ind)
-        return ind
+    def _eval_many(self, genomes: List[np.ndarray],
+                   cache: dict) -> List[Individual]:
+        """Evaluate a batch of genomes, deduplicating against the cache and
+        within the batch; fresh genomes go through ``evaluate_batch`` in one
+        call when available (scalar fallback otherwise). Cache/history
+        semantics are identical to looping ``_eval``."""
+        fresh: List[np.ndarray] = []
+        seen = set()
+        for g in genomes:
+            key = tuple(int(x) for x in g)
+            if key in cache or key in seen:
+                continue
+            seen.add(key)
+            fresh.append(g)
+        if fresh:
+            if self.evaluate_batch is not None:
+                results = self.evaluate_batch(fresh)
+            else:
+                results = [self.evaluate(g) for g in fresh]
+            for g, (objs, viol) in zip(fresh, results):
+                ind = Individual(g.copy(), np.asarray(objs, float),
+                                 float(viol))
+                cache[tuple(int(x) for x in g)] = ind
+                self.history.append(ind)
+        out = []
+        for g in genomes:
+            c = cache[tuple(int(x) for x in g)]
+            out.append(Individual(g.copy(), c.objectives.copy(), c.violation))
+        return out
 
     def _offspring(self, rng, pop: List[Individual]) -> List[np.ndarray]:
         p_mut = self.p_mutation or (1.0 / self.n_var)
@@ -142,14 +172,13 @@ class NSGA2:
     def run(self) -> List[Individual]:
         rng = np.random.default_rng(self.seed)
         cache: dict = {}
-        pop = [self._eval(rng.integers(self.var_lo, self.var_hi + 1,
-                                       self.n_var), cache)
-               for _ in range(self.initial_pop_size)]
+        pop = self._eval_many(
+            [rng.integers(self.var_lo, self.var_hi + 1, self.n_var)
+             for _ in range(self.initial_pop_size)], cache)
         for gen in range(self.n_generations):
             for front in fast_non_dominated_sort(pop):
                 assign_crowding(front)
-            children = [self._eval(g, cache)
-                        for g in self._offspring(rng, pop)]
+            children = self._eval_many(self._offspring(rng, pop), cache)
             merged = pop + children
             survivors: List[Individual] = []
             for front in fast_non_dominated_sort(merged):

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import batched_eval
 from repro.core import quantization as Q
 from repro.core.beacon import BeaconSearch
 from repro.core.hardware import BITFUSION, SILAGO, HardwareModel
@@ -62,10 +63,26 @@ class TrainedSRU:
 
         self._err = _err
         self._err_plain = _err_plain
+        self._batched_eval = None
 
     def qp_for(self, alloc: Alloc):
         return sru.quant_triples_for(alloc, self.wclips, self.act_ranges,
                                      self.wranges)
+
+    def batched_evaluator(self) -> batched_eval.BatchedSRUEvaluator:
+        """Lazily-built population evaluator (one vmapped forward scores a
+        whole GA generation; compiled per population-size bucket)."""
+        if self._batched_eval is None:
+            self._batched_eval = batched_eval.BatchedSRUEvaluator(
+                self.cfg, self.val_subsets, self.qp_for)
+        return self._batched_eval
+
+    def val_error_batch(self, allocs, params=None):
+        """Batched counterpart of ``val_error``: max error over the 4
+        validation subsets for EVERY allocation, one vmapped call per
+        subset. Matches the scalar path exactly (integer error counts)."""
+        params = self.params if params is None else params
+        return self.batched_evaluator().errors(allocs, params)
 
     def val_error(self, alloc: Optional[Alloc] = None,
                   params=None) -> float:
@@ -146,7 +163,8 @@ def train_small_sru(steps: int = 400, *, cfg: SRUModelConfig = SEARCH_CFG,
 
 def build_problem(trained: TrainedSRU, hardware: HardwareModel,
                   objectives, *, use_search_cfg_sizes: bool = True,
-                  sram_override: Optional[int] = None) -> MOHAQProblem:
+                  sram_override: Optional[int] = None,
+                  batched: bool = True) -> MOHAQProblem:
     cfg = trained.cfg
     macs = cfg.layer_weight_counts()
     hw = hardware
@@ -156,40 +174,48 @@ def build_problem(trained: TrainedSRU, hardware: HardwareModel,
     def error_fn(alloc: Alloc) -> float:
         return trained.val_error(alloc)
 
+    def batch_error_fn(allocs):
+        return trained.val_error_batch(allocs)
+
     fixed = 14 * cfg.hidden * 2 * cfg.n_sru_layers * 2  # elementwise ops
     return MOHAQProblem(
         layer_names=list(LAYER_NAMES), layer_macs=macs, layer_weights=macs,
         vector_weights=cfg.vector_weight_count(), hardware=hw,
         error_fn=error_fn, baseline_error=trained.baseline_val_error,
+        batch_error_fn=batch_error_fn if batched else None,
         fixed_ops=fixed, objectives=objectives)
 
 
 # ------------------------------------------------------------- experiments
 
 def experiment1_memory(trained: TrainedSRU, *, generations=15, pop=10,
-                       initial=24, seed=0, log=None) -> MOHAQResult:
+                       initial=24, seed=0, log=None,
+                       batched: bool = True) -> MOHAQResult:
     """Paper §5.2: minimize (WER, memory); no hardware platform."""
     mem_only = dataclasses.replace(BITFUSION, sram_bytes=None,
                                    name="none(mem-only)")
-    prob = build_problem(trained, mem_only, ("error", "memory"))
+    prob = build_problem(trained, mem_only, ("error", "memory"),
+                         batched=batched)
     return run_search(prob, n_generations=generations, pop_size=pop,
                       initial_pop_size=initial, seed=seed, log=log)
 
 
 def experiment2_silago(trained: TrainedSRU, *, generations=15, pop=10,
-                       initial=24, seed=0, log=None) -> MOHAQResult:
+                       initial=24, seed=0, log=None,
+                       batched: bool = True) -> MOHAQResult:
     """Paper §5.3: SiLago, 3 objectives (WER, speedup, energy), 6MB-equiv
     SRAM constraint (scaled to the search model: 3.5x compression bound)."""
     sram = int(trained.cfg.total_weights() * 32 / 8 / 3.5)
     prob = build_problem(trained, SILAGO, ("error", "speedup", "energy"),
-                         sram_override=sram)
+                         sram_override=sram, batched=batched)
     return run_search(prob, n_generations=generations, pop_size=pop,
                       initial_pop_size=initial, seed=seed, log=log)
 
 
 def experiment3_bitfusion(trained: TrainedSRU, *, generations=15, pop=10,
                           initial=24, seed=0, beacon: bool = False,
-                          retrain_steps: int = 60, log=None):
+                          retrain_steps: int = 60, log=None,
+                          batched: bool = True):
     """Paper §5.4: Bitfusion, (WER, speedup), small-SRAM constraint,
     inference-only then beacon-based. The paper's 10.6x bound is scaled to
     this model's weight mix: the 16-bit vectors are 2.2% of the search model
@@ -199,7 +225,7 @@ def experiment3_bitfusion(trained: TrainedSRU, *, generations=15, pop=10,
     vec = trained.cfg.vector_weight_count()
     sram = int((mat * 3.5 + vec * 16) / 8)
     prob = build_problem(trained, BITFUSION, ("error", "speedup"),
-                         sram_override=sram)
+                         sram_override=sram, batched=batched)
     bs = None
     if beacon:
         data = synthetic.speech_batches(trained.task, 8, 48, seed=3)

@@ -17,6 +17,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
+
+def _canon(assignment: MeshAxes) -> MeshAxes:
+    """Canonical mesh-axis assignment: 1-tuples become the bare string.
+    Current JAX keeps PartitionSpec(('model',), None) distinct from
+    PartitionSpec('model', None); emitting only the canonical form keeps
+    spec comparisons (and the divisibility tie-breaking) stable."""
+    if isinstance(assignment, tuple):
+        if not assignment:
+            return None
+        if len(assignment) == 1:
+            return assignment[0]
+    return assignment
+
 # Default rules for the production mesh. "pod" is folded into the data axis.
 DEFAULT_RULES: Dict[str, MeshAxes] = {
     "batch": ("pod", "data"),
@@ -62,7 +75,7 @@ def axis_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None
                 continue
             axes = (v,) if isinstance(v, str) else tuple(v)
             axes = tuple(a for a in axes if a in names)
-            merged[k] = axes if axes else None
+            merged[k] = _canon(axes)
     _CTX.mesh, _CTX.rules = mesh, merged
     try:
         yield
@@ -80,7 +93,7 @@ def logical_to_spec(logical: Sequence[Optional[str]]) -> P:
         if name is None:
             parts.append(None)
         else:
-            parts.append(_CTX.rules.get(name))
+            parts.append(_canon(_CTX.rules.get(name)))
     return P(*parts)
 
 

@@ -251,6 +251,32 @@ def forward(params, cfg: SRUModelConfig, feats,
     return logits
 
 
+def forward_population(params, cfg: SRUModelConfig, feats, qp_stack,
+                       use_kernel: bool = False):
+    """Population-parameterized forward: score P quantization candidates in
+    ONE jitted call by vmapping the quantized forward over the grid axis.
+
+    ``qp_stack``: (P, L, 6) float32 — for each candidate (population lane)
+    and each layer in ``cfg.layer_names()`` order, the dynamic
+    (w_scale, w_lo, w_hi, a_scale, a_lo, a_hi) grids produced by
+    ``quant_triples_for``. Params and feats are closed over (broadcast, not
+    vmapped): XLA batches the MxV einsums into single P-wide matmuls and
+    batches each recurrent scan's carry across lanes, so one dispatch scores
+    the whole population. Because each lane runs the exact ``forward(qp=)``
+    arithmetic, per-candidate error counts are bit-identical to the scalar
+    path (hand-rolled fold-the-population-into-the-batch-axis variants were
+    measured slower than XLA's own scan batching on CPU and are not kept).
+    Returns logits (P, B, T, n_outputs).
+    """
+    names = cfg.layer_names()
+
+    def one(qp_rows):                                      # (L, 6) per lane
+        qp = {n: qp_rows[i] for i, n in enumerate(names)}
+        return forward(params, cfg, feats, qp=qp, use_kernel=use_kernel)
+
+    return jax.vmap(one)(qp_stack)
+
+
 def calibrate(params, cfg: SRUModelConfig, feats_batches) -> Dict[str, float]:
     """Expected activation ranges = median of per-sequence max-abs."""
     cal = Q.ActRangeCalibrator()

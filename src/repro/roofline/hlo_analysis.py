@@ -97,12 +97,17 @@ class Instr:
     out_bytes: int = 0
 
     def operands(self) -> List[str]:
-        """Operand instruction names (tolerates nested parens in attrs)."""
+        """Operand instruction names (tolerates nested parens in attrs).
+
+        Current XLA prints operands with their type annotation
+        (``f32[64,128]{1,0} %Arg_0.1``); older dumps print bare ``%Arg_0.1``.
+        Both forms resolve to the instruction name.
+        """
         depth, cur, ops = 0, "", []
         for ch in self.args:
-            if ch == "(" :
+            if ch in "([{":
                 depth += 1
-            elif ch == ")":
+            elif ch in ")]}":
                 if depth == 0:
                     break
                 depth -= 1
@@ -114,7 +119,14 @@ class Instr:
         ops.append(cur)
         names = []
         for o in ops:
-            m = re.match(r"\s*%?([\w\.\-]+)", o)
+            m = re.search(r"%([\w\.\-]+)", o)
+            if m is None:
+                # no % sigil: drop a leading (tuple-)type annotation, then
+                # take the first bare token
+                o = re.sub(
+                    r"^\s*(?:\([^)]*\)|[a-z]\w*\[[\d,]*\](?:\{[^}]*\})?)\s+",
+                    "", o)
+                m = re.match(r"\s*([\w\.\-]+)", o)
             if m:
                 names.append(m.group(1))
         return names

@@ -1,0 +1,89 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+The real library is used when installed. When it is missing (the container
+ships without it), a small deterministic fallback sampler stands in: each
+``@given`` test runs against a fixed-seed stream of random examples, so the
+property tests still execute — with less adversarial inputs, but without
+turning test collection red.
+
+Only the strategy surface this repo's tests use is implemented:
+floats / integers / sampled_from / lists / tuples, plus .map and .filter.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred, _tries: int = 200):
+            def draw(rng):
+                for _ in range(_tries):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("fallback sampler: filter predicate "
+                                 "rejected all examples")
+            return _Strategy(draw)
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elems))
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n_examples = min(getattr(fn, "_fallback_max_examples", 20), 20)
+
+            # *args-only signature on purpose: pytest must not mistake the
+            # drawn parameter names for fixtures
+            def run(*args, **kwargs):
+                rng = _np.random.default_rng(0)
+                for _ in range(n_examples):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco

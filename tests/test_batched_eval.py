@@ -1,0 +1,145 @@
+"""Batched population evaluation: bit-identical objectives and Pareto front
+vs the per-candidate scalar path on a seeded small SRU problem."""
+import numpy as np
+import pytest
+
+from repro.core import batched_eval as BE
+from repro.core import sru_experiment as X
+from repro.core.mohaq import run_search
+from repro.core.nsga2 import NSGA2
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return X.train_small_sru(steps=60)
+
+
+@pytest.fixture(scope="module")
+def problem(trained):
+    return X.build_problem(trained, X.BITFUSION, ("error", "speedup"))
+
+
+def _random_allocs(problem, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [problem.decode(problem._snap(rng.integers(1, 5, problem.n_var)))
+            for _ in range(n)]
+
+
+class TestStacking:
+    def test_bucket_size(self):
+        assert BE.bucket_size(1) == 1
+        assert BE.bucket_size(3) == 4
+        assert BE.bucket_size(16) == 16
+        assert BE.bucket_size(17) == 32
+        assert BE.bucket_size(65) == 128
+        assert BE.bucket_size(130) == 192
+
+    def test_stack_qps_layout(self, trained):
+        allocs = _random_allocs_from_bits()
+        qps = [trained.qp_for(a) for a in allocs]
+        names = list(trained.cfg.layer_names())
+        arr = BE.stack_qps(qps, names)
+        assert arr.shape == (len(allocs), len(names), 6)
+        assert arr.dtype == np.float32
+        for p, qp in enumerate(qps):
+            for i, n in enumerate(names):
+                assert np.allclose(arr[p, i], np.asarray(qp[n], np.float32))
+
+
+def _random_allocs_from_bits():
+    from repro.models.sru import LAYER_NAMES
+    return [{n: (b, b) for n in LAYER_NAMES} for b in (2, 4, 8, 16)]
+
+
+class TestErrorParity:
+    def test_batched_errors_bit_identical(self, trained, problem):
+        """Every candidate's max-subset error matches the scalar path
+        exactly — error counts are integers, so equality is exact."""
+        allocs = _random_allocs(problem, 11, seed=2)   # odd n: exercises padding
+        scalar = [trained.val_error(a) for a in allocs]
+        batched = trained.val_error_batch(allocs)
+        assert scalar == batched
+
+    def test_evaluate_population_matches_evaluate(self, problem):
+        rng = np.random.default_rng(5)
+        genomes = [rng.integers(1, 5, problem.n_var) for _ in range(6)]
+        scalar = [problem.evaluate(g) for g in genomes]
+        batched = problem.evaluate_population(genomes)
+        for (so, sv), (bo, bv) in zip(scalar, batched):
+            assert list(so) == list(bo)
+            assert sv == bv
+
+    def test_infeasible_screened_identically(self, trained):
+        """Memory-infeasible genomes never reach the error evaluator and
+        still pack identical (inf-error) objectives + violations."""
+        mat = sum(trained.cfg.layer_weight_counts().values())
+        vec = trained.cfg.vector_weight_count()
+        sram = int((mat * 2.5 + vec * 16) / 8)    # tight: most allocs fail
+        prob = X.build_problem(trained, X.BITFUSION, ("error", "speedup"),
+                               sram_override=sram)
+        calls = []
+        orig = prob.batch_error_fn
+        prob.batch_error_fn = lambda allocs: (calls.append(len(allocs)),
+                                              orig(allocs))[1]
+        rng = np.random.default_rng(7)
+        genomes = [rng.integers(1, 5, prob.n_var) for _ in range(8)]
+        batched = prob.evaluate_population(genomes)
+        scalar = [prob.evaluate(g) for g in genomes]
+        for (so, sv), (bo, bv) in zip(scalar, batched):
+            assert list(so) == list(bo) and sv == bv
+        n_feasible = sum(1 for _, v in scalar if v == 0.0)
+        # only feasible candidates occupied vmap lanes
+        assert sum(calls) == n_feasible
+
+
+class TestSearchParity:
+    def test_pareto_front_identical(self, trained):
+        """Full NSGA-II runs (scalar vs evaluate_batch) visit the same
+        genomes and return the identical Pareto front under a fixed seed."""
+        kw = dict(n_generations=4, pop_size=6, initial_pop_size=10, seed=3)
+        prob_s = X.build_problem(trained, X.BITFUSION, ("error", "speedup"),
+                                 batched=False)
+        prob_b = X.build_problem(trained, X.BITFUSION, ("error", "speedup"))
+        rs = run_search(prob_s, **kw)
+        rb = run_search(prob_b, **kw)
+        assert rs.n_evals == rb.n_evals
+        key = lambda res: sorted((tuple(i.genome.tolist()),
+                                  tuple(i.objectives.tolist()),
+                                  float(i.violation)) for i in res.pareto)
+        assert key(rs) == key(rb)
+
+
+class TestNSGA2BatchHook:
+    def test_evaluate_batch_equals_scalar(self):
+        """The GA's batch hook is a pure drop-in: identical history and
+        front on an analytic problem."""
+        def ev(g):
+            return [float(g.sum()), float((4 - g).sum())], 0.0
+
+        def ev_batch(gs):
+            return [ev(g) for g in gs]
+
+        runs = []
+        for batch in (None, ev_batch):
+            ga = NSGA2(n_var=6, var_lo=1, var_hi=4, evaluate=ev,
+                       evaluate_batch=batch, pop_size=8, initial_pop_size=12,
+                       n_generations=6, seed=11)
+            front = ga.run()
+            runs.append((len(ga.history),
+                         sorted(tuple(i.genome.tolist()) for i in front)))
+        assert runs[0] == runs[1]
+
+    def test_batch_dedup_within_generation(self):
+        """Duplicate genomes in one batch are evaluated once (cache parity
+        with the scalar path)."""
+        seen = []
+
+        def ev(g):
+            seen.append(tuple(g.tolist()))
+            return [float(g.sum())], 0.0
+        ga = NSGA2(n_var=3, var_lo=1, var_hi=1, evaluate=ev,
+                   evaluate_batch=lambda gs: [ev(g) for g in gs],
+                   pop_size=4, initial_pop_size=8, n_generations=1, seed=0)
+        ga.run()
+        assert len(seen) == 1          # all genomes identical -> one eval
+        assert len(ga.history) == 1

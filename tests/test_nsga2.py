@@ -2,7 +2,7 @@
 constraint handling — unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.nsga2 import (NSGA2, Individual, assign_crowding, dominates,
                               fast_non_dominated_sort, pareto_front)
