@@ -180,25 +180,45 @@ def kernel_sru_scan():
     emit("kernel_sru_scan", us, f"B={B};T={T};n={n};interpret_mode=True")
 
 
-def search_batched_eval(full: bool = False):
-    """Search-candidate evaluation throughput: the per-candidate scalar path
-    (what the seed GA ran — one quantized forward per allocation per
-    validation subset) vs the batched population evaluator (one vmapped call
-    scoring the whole population). Measured interleaved (this box's CPU
-    allocation is noisy; alternating trials hit both paths equally) at the
-    paper-style compact ranking subsets (§4.2: small validation subsets
-    suffice to rank candidates) and, for transparency, at the seed's full
-    validation shape. Writes BENCH_search_throughput.json."""
+def search_pipeline_v2(full: bool = False) -> bool:
+    """Search-loop evaluation pipeline v2 throughput. Three generations of
+    the hot path are measured on identical candidate sets (interleaved —
+    this box's CPU allocation is noisy) at the paper-style compact ranking
+    subsets (§4.2) and, for transparency, at the seed's full shape:
+
+      - scalar:       one quantized forward per allocation (seed GA);
+      - pr1_batched:  PR-1's vmapped population evaluator;
+      - v2:           the explicit population-axis evaluator (direction-
+                      fused scans, population-batched matmuls).
+
+    The beacon rows measure the *pipeline* difference the v2 rework makes
+    for the retraining-aware search: PR-1 detached batching entirely (one
+    scalar forward per candidate, twice for beacon-routed ones); v2 groups
+    the population by nearest beacon and issues one batched call per
+    (beacon-params, group). The memo row reports cross-generation
+    memoization on a real seeded search. Writes
+    BENCH_search_throughput.json and returns False (non-zero process exit)
+    if v2 throughput regresses below the stored PR-1 numbers."""
     import dataclasses
 
     import jax.numpy as jnp
 
     from repro.core import sru_experiment as X
+    from repro.core.beacon import Beacon, BeaconSearch
     from repro.data import synthetic
+    from repro.training import qat
+
+    prev = None
+    if os.path.exists("BENCH_search_throughput.json"):
+        try:
+            prev = json.load(open("BENCH_search_throughput.json"))
+        except Exception:
+            prev = None
 
     trained = X.train_small_sru(steps=60 if full else 40)
     prob = X.build_problem(trained, BITFUSION, ("error", "speedup"))
     rng = np.random.default_rng(0)
+    med = lambda xs: sorted(xs)[len(xs) // 2]
 
     def subsets(b, t):
         raw, _ = synthetic.speech_eval_sets(trained.task, batch=max(b, 1),
@@ -208,27 +228,93 @@ def search_batched_eval(full: bool = False):
             jnp.concatenate([x["labels"] for x in bs])[:b, :t])
         return [stack(s) for s in raw]
 
-    def measure(tr, pop, trials=5):
+    def measure_plain(tr, pop, trials=5):
         genomes = [rng.integers(1, 5, prob.n_var) for _ in range(pop)]
         allocs = [prob.decode(prob._snap(g)) for g in genomes]
-        scalar_ref = [tr.val_error(a) for a in allocs]       # warm + reference
-        assert tr.val_error_batch(allocs) == scalar_ref, \
-            "batched evaluator diverged from scalar path"
-        ts, tb = [], []
+        scalar_ref = [tr.val_error(a) for a in allocs]      # warm + reference
+        assert tr.val_error_batch(allocs, fused=False) == scalar_ref, \
+            "PR-1 batched evaluator diverged from scalar path"
+        assert tr.val_error_batch(allocs, fused=True) == scalar_ref, \
+            "v2 evaluator diverged from scalar path"
+        ts, t1, t2 = [], [], []
         for _ in range(trials):
             t0 = time.perf_counter()
             for a in allocs:
                 tr.val_error(a)
             ts.append(time.perf_counter() - t0)
             t0 = time.perf_counter()
-            tr.val_error_batch(allocs)
-            tb.append(time.perf_counter() - t0)
-        med = lambda xs: sorted(xs)[len(xs) // 2]
+            tr.val_error_batch(allocs, fused=False)
+            t1.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            tr.val_error_batch(allocs, fused=True)
+            t2.append(time.perf_counter() - t0)
         return {"pop": pop, "scalar_ms": med(ts) * 1e3,
-                "batched_ms": med(tb) * 1e3,
-                "speedup": med(ts) / med(tb), "bit_identical": True}
+                "pr1_batched_ms": med(t1) * 1e3, "v2_ms": med(t2) * 1e3,
+                "speedup_v2_vs_scalar": med(ts) / med(t2),
+                "speedup_v2_vs_pr1": med(t1) / med(t2),
+                "bit_identical": True}
+
+    def measure_beacon(tr, pop, trials=5, retrain_steps=3):
+        """PR-1 pipeline (detached: scalar error_fn per candidate) vs the
+        v2 beacon-grouped batched evaluator on one frozen beacon state."""
+        bprob = X.build_problem(tr, BITFUSION, ("error", "speedup"))
+        data = synthetic.speech_batches(tr.task, 8, 48, seed=3)
+
+        def retrain_fn(alloc, base_params):
+            wclips = {n: tr.wclips[(n, a[0])]
+                      for n, a in alloc.items() if a[0] != 16}
+            return qat.retrain_sru(base_params, tr.cfg, alloc, data,
+                                   steps=retrain_steps,
+                                   act_ranges=tr.act_ranges, wclips=wclips)
+
+        bs = BeaconSearch(
+            problem=bprob, base_params=tr.params, retrain_fn=retrain_fn,
+            error_with_params=lambda p, a: tr.val_error(a, params=p),
+            batch_error_with_params=lambda p, al: tr.val_error_batch(
+                al, params=p))
+        seed_allocs = [bprob.decode(bprob._snap(rng.integers(1, 5,
+                                                            bprob.n_var)))
+                       for _ in range(8)]
+        bs.batch_error_fn(seed_allocs)              # create real beacons
+        if not bs.beacons:                          # all low/high error:
+            bs.beacons.append(Beacon(dict(seed_allocs[0]), tr.params))
+        bs.max_beacons = len(bs.beacons)            # freeze: timing is pure
+        allocs = [bprob.decode(bprob._snap(rng.integers(1, 5, bprob.n_var)))
+                  for _ in range(pop)]
+        detached = [bs.error_fn(a) for a in allocs]       # warm + reference
+        grouped = bs.batch_error_fn(allocs)
+        assert [float(e) for e in detached] == [float(e) for e in grouped], \
+            "beacon-grouped evaluator diverged from the detached path"
+        td, tg = [], []
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            for a in allocs:
+                bs.error_fn(a)
+            td.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            bs.batch_error_fn(allocs)
+            tg.append(time.perf_counter() - t0)
+        return {"pop": pop, "n_beacons": len(bs.beacons),
+                "pr1_detached_ms": med(td) * 1e3,
+                "v2_grouped_ms": med(tg) * 1e3,
+                "speedup_v2_vs_pr1": med(td) / med(tg),
+                "errors_identical": True,
+                "n_retrains": bs.n_retrains}
 
     compact = dataclasses.replace(trained, val_subsets=subsets(1, 24))
+
+    # memoization on a real seeded search (v2 evaluator)
+    mprob = X.build_problem(compact, BITFUSION, ("error", "speedup"))
+    mprob.error_memo = {}
+    gens, pop = (8, 32)
+    res = run_search_for_bench(mprob, gens, pop)
+    requested = 32 + gens * pop
+    memo = {"generations": gens, "pop": pop, "requested_evals": requested,
+            "unique_evals": res.n_evals,
+            "genome_cache_hits": res.n_cache_hits,
+            "alloc_memo_hits": res.n_memo_hits,
+            "saved_frac": 1.0 - res.n_evals / requested}
+
     results = {
         "machine": {"cpu_count": os.cpu_count()},
         "eval_shapes": {
@@ -236,19 +322,77 @@ def search_batched_eval(full: bool = False):
                        "ranking subsets",
             "full": "4 subsets x (8 seqs, 48 frames) — seed validation shape",
         },
-        "compact": [measure(compact, 16), measure(compact, 32)],
-        "full": [measure(trained, 16)],
+        "plain_compact": [measure_plain(compact, 16),
+                          measure_plain(compact, 32)],
+        "plain_full": [measure_plain(trained, 16)],
+        "beacon_compact": [measure_beacon(compact, 32)],
+        "memo": memo,
     }
-    with open("BENCH_search_throughput.json", "w") as f:
-        json.dump(results, f, indent=2)
-    c16, c32 = results["compact"]
-    f16 = results["full"][0]
-    emit("search_batched_eval_p16", c16["batched_ms"] * 1e3 / 16,
-         f"speedup={c16['speedup']:.2f}x;scalar_ms={c16['scalar_ms']:.0f};"
-         f"batched_ms={c16['batched_ms']:.0f};bit_identical=True")
-    emit("search_batched_eval_p32", c32["batched_ms"] * 1e3 / 32,
-         f"speedup={c32['speedup']:.2f}x;full_shape_p16_speedup="
-         f"{f16['speedup']:.2f}x;json=BENCH_search_throughput.json")
+
+    c16, c32 = results["plain_compact"]
+    b32 = results["beacon_compact"][0]
+    emit("search_pipeline_v2_plain_p32", c32["v2_ms"] * 1e3 / 32,
+         f"v2_vs_scalar={c32['speedup_v2_vs_scalar']:.2f}x;"
+         f"v2_vs_pr1={c32['speedup_v2_vs_pr1']:.2f}x;"
+         f"p16_v2_vs_scalar={c16['speedup_v2_vs_scalar']:.2f}x;"
+         f"bit_identical=True")
+    emit("search_pipeline_v2_beacon_p32", b32["v2_grouped_ms"] * 1e3 / 32,
+         f"v2_vs_pr1_detached={b32['speedup_v2_vs_pr1']:.2f}x;"
+         f"beacons={b32['n_beacons']};errors_identical=True")
+    emit("search_pipeline_v2_memo", None,
+         f"requested={memo['requested_evals']};unique={memo['unique_evals']};"
+         f"cache_hits={memo['genome_cache_hits']};"
+         f"saved={memo['saved_frac']*100:.0f}%")
+
+    # ---- regression gate vs the PR-1 numbers ------------------------------
+    # Absolute ms drift run-to-run on this shared box (the PR-1 rows were
+    # measured in a different process), so the gate compares RATIOS, which
+    # cancel machine speed: (a) v2 must not fall behind the same-run PR-1
+    # lowering, and (b) v2's speedup over the scalar path must not drop
+    # below the stored rows' speedup — scalar is the in-run yardstick, so a
+    # change that slows the batched substrate while the scalar forward
+    # stands still is caught even though every stored ms is stale.
+    ok = True
+    stored_ratio = {}
+    if prev is not None:
+        for row in prev.get("plain_compact", prev.get("compact", [])):
+            base = row.get("pr1_batched_ms", row.get("batched_ms"))
+            v2 = row.get("v2_ms", base)        # old schema: v2 == batched
+            if v2:
+                stored_ratio[row["pop"]] = row["scalar_ms"] / v2
+    for row in results["plain_compact"]:
+        if row["v2_ms"] > row["pr1_batched_ms"] * 1.10:
+            print(f"REGRESSION: v2 plain pop {row['pop']} "
+                  f"{row['v2_ms']:.1f}ms vs same-run PR-1 "
+                  f"{row['pr1_batched_ms']:.1f}ms")
+            ok = False
+        ref = stored_ratio.get(row["pop"])
+        if ref and row["speedup_v2_vs_scalar"] < ref * 0.75:
+            print(f"REGRESSION: v2 plain pop {row['pop']} speedup over "
+                  f"scalar {row['speedup_v2_vs_scalar']:.2f}x fell below "
+                  f"the stored reference {ref:.2f}x")
+            ok = False
+    if b32["speedup_v2_vs_pr1"] < 2.0:
+        print(f"REGRESSION: beacon-grouped v2 speedup "
+              f"{b32['speedup_v2_vs_pr1']:.2f}x < 2x over the PR-1 "
+              f"detached pipeline")
+        ok = False
+
+    # only a passing run may replace the stored reference — a regressing
+    # run must not overwrite the very baseline it was gated against
+    if ok:
+        with open("BENCH_search_throughput.json", "w") as f:
+            json.dump(results, f, indent=2)
+    else:
+        print("BENCH_search_throughput.json left untouched (regressing run "
+              "does not reset the gate's reference)")
+    return ok
+
+
+def run_search_for_bench(prob, gens, pop):
+    from repro.core.mohaq import run_search
+    return run_search(prob, n_generations=gens, pop_size=pop,
+                      initial_pop_size=32, seed=0)
 
 
 def nsga2_throughput():
@@ -325,8 +469,12 @@ def main() -> None:
     nsga2_throughput()
     hlo_analyzer_bench()
     roofline_table()
-    search_batched_eval(args.full)
+    ok = search_pipeline_v2(args.full)
     fig7_10_search(args.full)
+    if not ok:
+        print("search_pipeline_v2: v2 throughput regressed below the "
+              "stored PR-1 numbers", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,23 @@ paid once instead of P times.
 
 Population sizes are padded up to fixed buckets so the jitted evaluator
 compiles once per bucket, not once per population size.
+
+Population-axis layout: ``stack_qps`` produces the (P, L, 6) grid array —
+population lane x layer (in ``cfg.layer_names()`` order) x the six
+(w_scale, w_lo, w_hi, a_scale, a_lo, a_hi) floats. ``forward_population``
+keeps the P axis explicit end to end: P-batched MxV matmuls, one
+direction-fused recurrence scan per Bi-SRU layer, and (with
+``use_kernel=True``) a Pallas kernel whose grid is (P, B/bb, n/bn) so the
+population axis feeds the compute grid directly.
+
+Beacon-grouping contract (core/beacon.py): the evaluator itself is
+parameter-agnostic — ``errors(allocs, params)`` scores any candidate group
+under any full-precision parameter set (base or retrained) with identical
+integer error counts to the scalar path. Beacon search exploits this by
+grouping a population by nearest beacon and issuing one ``errors`` call per
+(beacon-params, candidate-group); correctness does not depend on which
+params are passed, only bit-parity per call does, so grouped evaluation is
+exactly the scalar sequence re-batched.
 """
 from __future__ import annotations
 
@@ -60,10 +77,14 @@ class BatchedSRUEvaluator:
     cheap; the jitted forward never recompiles across allocations).
     Error convention matches ``TrainedSRU.val_error``: per candidate, the
     MAX frame-error % over the validation subsets (paper §4.2).
+
+    ``fused=True`` (default) runs the v2 explicit population-axis forward
+    (direction-fused scans); ``fused=False`` keeps the PR-1 vmap lowering
+    for benchmarking. Both are bit-identical to the scalar path.
     """
 
     def __init__(self, cfg, val_subsets, make_qp: Callable[[Alloc], dict],
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, fused: bool = True):
         from repro.models import sru
 
         self.cfg = cfg
@@ -87,7 +108,8 @@ class BatchedSRUEvaluator:
         @jax.jit
         def _batch_err(params, feats, labels, qp_stack):
             logits = sru.forward_population(params, cfg, feats, qp_stack,
-                                            use_kernel=use_kernel)
+                                            use_kernel=use_kernel,
+                                            fused=fused)
             wrong = jnp.argmax(logits, -1) != labels[None]  # (P, B*, T)
             if self._folded:
                 p, _, t = wrong.shape

@@ -37,11 +37,17 @@ class BeaconSearch:
 
     retrain_fn(alloc) -> retrained params (binary-connect QAT, caller-owned).
     error_with_params(params, alloc) -> error %.
+    batch_error_with_params(params, allocs) -> [error %] (optional): a
+    population evaluator with an explicit parameter set — when provided,
+    ``attach`` wires a *beacon-grouped* batched evaluator instead of
+    detaching batching entirely (see ``batch_error_fn``).
     """
     problem: MOHAQProblem
     base_params: Any
     retrain_fn: Callable[[Alloc, Any], Any]
     error_with_params: Callable[[Any, Alloc], float]
+    batch_error_with_params: Optional[
+        Callable[[Any, Sequence[Alloc]], Sequence[float]]] = None
     distance_threshold: float = 6.0
     # enlarged beacon-feasible area (paper: wider than the plain feasible area
     # because retraining pulls solutions back in)
@@ -52,38 +58,89 @@ class BeaconSearch:
     beacons: List[Beacon] = field(default_factory=list)
     n_retrains: int = 0
 
-    def error_fn(self, alloc: Alloc) -> float:
-        base_err = self.error_with_params(self.base_params, alloc)
+    def _route(self, alloc: Alloc,
+               base_err: float) -> Tuple[Optional[float], Optional[int]]:
+        """Algorithm 1 routing for one candidate, given its base-params
+        error. Returns (err, None) when the base error answers directly, or
+        (None, beacon_idx) when the error must be evaluated under that
+        beacon's parameters. Retrains (appending a new beacon) at exactly
+        the same decision points as the sequential scalar path — routing
+        depends only on base_err and the beacons existing so far, so the
+        grouped batched evaluator performs the identical retrains in the
+        identical order."""
         baseline = self.problem.baseline_error
         if base_err > baseline + self.beacon_feasible_margin:
-            return base_err                         # outside beacon-feasible area
+            return base_err, None               # outside beacon-feasible area
         if base_err <= baseline + self.min_error_gain_to_retrain:
-            return base_err                         # low error: skip retraining
+            return base_err, None               # low error: skip retraining
         names = self.problem.layer_names
         if self.beacons:
             dists = [beacon_distance(alloc, b.alloc, names)
                      for b in self.beacons]
             nearest = int(np.argmin(dists))
             if dists[nearest] <= self.distance_threshold:
-                return self.error_with_params(self.beacons[nearest].params,
-                                              alloc)
+                return None, nearest
         if len(self.beacons) < self.max_beacons:
             params = self.retrain_fn(alloc, self.base_params)
             self.beacons.append(Beacon(dict(alloc), params))
             self.n_retrains += 1
-            return self.error_with_params(params, alloc)
+            return None, len(self.beacons) - 1
         # beacon budget exhausted: use nearest anyway
         dists = [beacon_distance(alloc, b.alloc, names) for b in self.beacons]
-        return self.error_with_params(self.beacons[int(np.argmin(dists))].params,
-                                      alloc)
+        return None, int(np.argmin(dists))
+
+    def error_fn(self, alloc: Alloc) -> float:
+        base_err = self.error_with_params(self.base_params, alloc)
+        err, bidx = self._route(alloc, base_err)
+        if err is not None:
+            return err
+        return self.error_with_params(self.beacons[bidx].params, alloc)
+
+    def batch_error_fn(self, allocs: Sequence[Alloc]) -> List[float]:
+        """Beacon-grouped batched evaluation (restores P-wide dispatch
+        amortization for the retraining-aware search):
+
+        1. ONE batched call scores every candidate under the base params.
+        2. Candidates are routed in order through Algorithm 1 (bit-identical
+           decisions to the scalar path, including any retrains, because the
+           batched base errors equal the scalar ones exactly).
+        3. Candidates routed to a beacon are grouped by beacon index; one
+           batched call per (beacon-params, candidate-group) scores each
+           group. Deferring the group evals is sound: routing fixes the
+           beacon per candidate, and beacon evaluation is pure.
+        """
+        base_errs = self.batch_error_with_params(self.base_params, allocs)
+        results: List[Optional[float]] = [None] * len(allocs)
+        groups: Dict[int, List[int]] = {}
+        for i, (alloc, base_err) in enumerate(zip(allocs, base_errs)):
+            err, bidx = self._route(alloc, float(base_err))
+            if err is not None:
+                results[i] = err
+            else:
+                groups.setdefault(bidx, []).append(i)
+        for bidx, idxs in groups.items():
+            errs = self.batch_error_with_params(
+                self.beacons[bidx].params, [allocs[i] for i in idxs])
+            for i, e in zip(idxs, errs):
+                results[i] = float(e)
+        return results
 
     def attach(self) -> MOHAQProblem:
-        """Return the problem with its error_fn re-pointed at beacon logic.
+        """Return the problem with its error evaluation re-pointed at
+        beacon logic.
 
-        The batched population evaluator is detached: beacon routing picks
-        per-candidate parameter sets (nearest beacon, possibly retraining
-        mid-evaluation), which a single shared-params vmap cannot express.
+        With ``batch_error_with_params`` wired, populations evaluate through
+        the beacon-grouped ``batch_error_fn``; otherwise the batched
+        evaluator is detached (per-candidate parameter routing cannot run
+        under a single shared-params vmap). Either way the problem gets a
+        fresh error memo: beacon errors are retraining-aware and must not
+        mix with base-params errors cached by a previous search.
         """
         self.problem.error_fn = self.error_fn
-        self.problem.batch_error_fn = None
+        self.problem.batch_error_fn = (
+            self.batch_error_fn
+            if self.batch_error_with_params is not None else None)
+        self.problem.error_memo = {}
+        self.problem.memo_hits = 0
+        self.problem.n_error_evals = 0
         return self.problem

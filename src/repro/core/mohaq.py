@@ -43,6 +43,14 @@ class MOHAQProblem:
     objectives: Sequence[str] = ("error", "speedup", "energy")
     feasible_error_margin: float = 8.0        # paper: baseline + 8 pp
     base_bits: int = 32
+    # allocation-keyed error memo: a quantization allocation is scored at
+    # most once per search, no matter how many genomes snap to it (and, when
+    # a shared dict is injected, at most once across a multi-platform sweep
+    # — the error objective depends only on the allocation, not the
+    # hardware model). Hardware objectives are closed-form and recomputed.
+    error_memo: Optional[Dict[tuple, float]] = None
+    memo_hits: int = 0
+    n_error_evals: int = 0
 
     def __post_init__(self):
         menu = [b for b in (2, 4, 8, 16) if b in self.hardware.supported_bits]
@@ -50,6 +58,11 @@ class MOHAQProblem:
         self.tied = self.hardware.weights_equal_acts
         self.genes_per_layer = 1 if self.tied else 2
         self.n_var = len(self.layer_names) * self.genes_per_layer
+        if self.error_memo is None:
+            self.error_memo = {}
+
+    def _alloc_key(self, alloc: Alloc) -> tuple:
+        return tuple((n, alloc[n]) for n in self.layer_names)
 
     # ---- genome <-> allocation ----
     def decode(self, genome: np.ndarray) -> Alloc:
@@ -119,32 +132,54 @@ class MOHAQProblem:
         if violation > 0.0:
             # infeasible in memory: skip the (costly) error eval
             return self._finish(alloc, float("inf"), violation)
-        return self._finish(alloc, self.error_fn(alloc), violation)
+        key = self._alloc_key(alloc)
+        if key in self.error_memo:
+            self.memo_hits += 1
+            err = self.error_memo[key]
+        else:
+            err = self.error_fn(alloc)
+            self.error_memo[key] = err
+            self.n_error_evals += 1
+        return self._finish(alloc, err, violation)
 
     def evaluate_population(
             self, genomes: Sequence[np.ndarray]
     ) -> List[Tuple[List[float], float]]:
         """Population-level evaluation: memory-infeasible genomes are
-        screened out first (they never occupy a vmap lane), then the
-        survivors are scored in ONE ``batch_error_fn`` call (scalar
+        screened out first (they never occupy a vmap lane), memoized
+        allocations are filled from the error memo, then the remaining
+        allocations (deduplicated — distinct genomes can snap to one
+        allocation) are scored in ONE ``batch_error_fn`` call (scalar
         ``error_fn`` loop when no batched evaluator is wired)."""
         results: List[Optional[Tuple[List[float], float]]] = \
             [None] * len(genomes)
-        pending: List[Tuple[int, Alloc]] = []
+        pending: List[Tuple[int, Alloc, tuple]] = []
+        fresh_keys: List[tuple] = []
+        fresh_allocs: List[Alloc] = []
         for i, genome in enumerate(genomes):
             alloc, violation = self._screen(genome)
             if violation > 0.0:
                 results[i] = self._finish(alloc, float("inf"), violation)
-            else:
-                pending.append((i, alloc))
-        if pending:
-            allocs = [a for _, a in pending]
+                continue
+            key = self._alloc_key(alloc)
+            if key in self.error_memo:
+                self.memo_hits += 1
+            elif key not in fresh_keys:
+                fresh_keys.append(key)
+                fresh_allocs.append(alloc)
+            else:                      # duplicate within this batch
+                self.memo_hits += 1
+            pending.append((i, alloc, key))
+        if fresh_allocs:
             if self.batch_error_fn is not None:
-                errs = list(self.batch_error_fn(allocs))
+                errs = list(self.batch_error_fn(fresh_allocs))
             else:
-                errs = [self.error_fn(a) for a in allocs]
-            for (i, alloc), err in zip(pending, errs):
-                results[i] = self._finish(alloc, float(err), 0.0)
+                errs = [self.error_fn(a) for a in fresh_allocs]
+            for key, err in zip(fresh_keys, errs):
+                self.error_memo[key] = float(err)
+                self.n_error_evals += 1
+        for i, alloc, key in pending:
+            results[i] = self._finish(alloc, self.error_memo[key], 0.0)
         return results
 
     def _pack(self, err: float, hw: Dict[str, float]) -> List[float]:
@@ -164,6 +199,11 @@ class MOHAQResult:
     problem: MOHAQProblem
     pareto: List[Individual]
     n_evals: int
+    # memoization accounting for the run: genome-level repeats skipped by
+    # the GA's cross-generation cache, and allocation-level repeats skipped
+    # by the problem's error memo
+    n_cache_hits: int = 0
+    n_memo_hits: int = 0
 
     def rows(self) -> List[Dict]:
         out = []
@@ -196,4 +236,10 @@ def run_search(problem: MOHAQProblem, *, n_generations: int = 60,
                pop_size=pop_size, initial_pop_size=initial_pop_size,
                n_generations=n_generations, seed=seed, log=log)
     pareto = ga.run()
-    return MOHAQResult(problem, pareto, len(ga.history))
+    if log:
+        log(f"search done: evals={len(ga.history)} "
+            f"cache_hits={ga.n_cache_hits} memo_hits={problem.memo_hits} "
+            f"error_evals={problem.n_error_evals}")
+    return MOHAQResult(problem, pareto, len(ga.history),
+                       n_cache_hits=ga.n_cache_hits,
+                       n_memo_hits=problem.memo_hits)

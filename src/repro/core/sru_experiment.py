@@ -63,26 +63,35 @@ class TrainedSRU:
 
         self._err = _err
         self._err_plain = _err_plain
-        self._batched_eval = None
+        self._batched_eval = {}
+        # shared across every base-params search built from this model
+        # (multi-platform sweeps re-hit the same allocations for free);
+        # beacon searches attach their own memo — see BeaconSearch.attach
+        self.shared_error_memo: Dict[tuple, float] = {}
 
     def qp_for(self, alloc: Alloc):
         return sru.quant_triples_for(alloc, self.wclips, self.act_ranges,
                                      self.wranges)
 
-    def batched_evaluator(self) -> batched_eval.BatchedSRUEvaluator:
-        """Lazily-built population evaluator (one vmapped forward scores a
-        whole GA generation; compiled per population-size bucket)."""
-        if self._batched_eval is None:
-            self._batched_eval = batched_eval.BatchedSRUEvaluator(
-                self.cfg, self.val_subsets, self.qp_for)
-        return self._batched_eval
+    def batched_evaluator(self,
+                          fused: bool = True
+                          ) -> batched_eval.BatchedSRUEvaluator:
+        """Lazily-built population evaluator (one jitted call scores a
+        whole GA generation; compiled per population-size bucket).
+        ``fused=True`` is the v2 population-axis forward; ``fused=False``
+        keeps the PR-1 vmap lowering for comparison."""
+        if fused not in self._batched_eval:
+            self._batched_eval[fused] = batched_eval.BatchedSRUEvaluator(
+                self.cfg, self.val_subsets, self.qp_for, fused=fused)
+        return self._batched_eval[fused]
 
-    def val_error_batch(self, allocs, params=None):
+    def val_error_batch(self, allocs, params=None, *, fused: bool = True):
         """Batched counterpart of ``val_error``: max error over the 4
-        validation subsets for EVERY allocation, one vmapped call per
-        subset. Matches the scalar path exactly (integer error counts)."""
+        validation subsets for EVERY allocation in one call. Matches the
+        scalar path exactly (integer error counts). ``params`` selects the
+        full-precision parameter set (base or a retrained beacon's)."""
         params = self.params if params is None else params
-        return self.batched_evaluator().errors(allocs, params)
+        return self.batched_evaluator(fused=fused).errors(allocs, params)
 
     def val_error(self, alloc: Optional[Alloc] = None,
                   params=None) -> float:
@@ -183,7 +192,11 @@ def build_problem(trained: TrainedSRU, hardware: HardwareModel,
         vector_weights=cfg.vector_weight_count(), hardware=hw,
         error_fn=error_fn, baseline_error=trained.baseline_val_error,
         batch_error_fn=batch_error_fn if batched else None,
-        fixed_ops=fixed, objectives=objectives)
+        fixed_ops=fixed, objectives=objectives,
+        # base-params errors depend only on the allocation: share the memo
+        # across every search built from this trained model (platform sweeps
+        # score each allocation once). Beacon searches re-point this.
+        error_memo=trained.shared_error_memo)
 
 
 # ------------------------------------------------------------- experiments
@@ -241,9 +254,14 @@ def experiment3_bitfusion(trained: TrainedSRU, *, generations=15, pop=10,
         def error_with_params(params, alloc):
             return trained.val_error(alloc, params=params)
 
+        def batch_error_with_params(params, allocs):
+            return trained.val_error_batch(allocs, params=params)
+
         bs = BeaconSearch(problem=prob, base_params=trained.params,
                           retrain_fn=retrain_fn,
                           error_with_params=error_with_params,
+                          batch_error_with_params=(
+                              batch_error_with_params if batched else None),
                           distance_threshold=6.0)
         prob = bs.attach()
     res = run_search(prob, n_generations=generations, pop_size=pop,

@@ -66,7 +66,8 @@ def _next_mult(x, m):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r, interpret: bool = True):
-    """Padded/jitted fused SRU scan. Returns h only (matches model usage)."""
+    """Padded/jitted fused SRU scan. Returns (h, r); the caller applies the
+    highway skip h + (1-r)*x when the layer input width equals n."""
     B, T, n = uw.shape
     bb = 8 if B >= 8 else B
     bn = 128 if n >= 128 else _next_mult(n, 8)
@@ -77,7 +78,29 @@ def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r, interpret: bool = True):
     def padv(t):
         t, _ = _pad_to(t, bn, 0)
         return t
-    h, _c = _sru.sru_scan(padb(uw), padb(uf), padb(ur),
-                          padv(v_f), padv(v_r), padv(b_f), padv(b_r),
-                          block=(bb, bn), interpret=interpret)
-    return h[:B, :, :n]
+    h, r, _c = _sru.sru_scan(padb(uw), padb(uf), padb(ur),
+                             padv(v_f), padv(v_r), padv(b_f), padv(b_r),
+                             block=(bb, bn), interpret=interpret)
+    return h[:B, :, :n], r[:B, :, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sru_scan_pop(uw, uf, ur, v_f, v_r, b_f, b_r, interpret: bool = True):
+    """Padded/jitted population-axis SRU scan. uw/uf/ur: (P, B, T, n) — one
+    quantization candidate per lane, v/b shared. Returns (h, r), both
+    (P, B, T, n). The population axis maps straight onto the kernel grid
+    (see sru_scan.sru_scan_pop) instead of vmapping over ``pallas_call``."""
+    P, B, T, n = uw.shape
+    bb = 8 if B >= 8 else B
+    bn = 128 if n >= 128 else _next_mult(n, 8)
+    def padb(t):
+        t, _ = _pad_to(t, bb, 1)
+        t, _ = _pad_to(t, bn, 3)
+        return t
+    def padv(t):
+        t, _ = _pad_to(t, bn, 0)
+        return t
+    h, r, _c = _sru.sru_scan_pop(padb(uw), padb(uf), padb(ur),
+                                 padv(v_f), padv(v_r), padv(b_f), padv(b_r),
+                                 block=(bb, bn), interpret=interpret)
+    return h[:, :B, :, :n], r[:, :B, :, :n]

@@ -59,11 +59,13 @@ def sru_scan_ref(uw, uf, ur, v_f, v_r, b_f, b_r, c0=None):
     """SRU element-wise recurrence (paper Eq. 2), the kernel's oracle.
 
     uw/uf/ur: (B, T, n) f32 precomputed MxV outputs (W x_t slices).
-    v_f, v_r, b_f, b_r: (n,) f32. Returns (h, c_last): h (B, T, n).
+    v_f, v_r, b_f, b_r: (n,) f32. Returns (h, r, c_last): h/r (B, T, n).
         f_t = sigmoid(uf_t + v_f * c_{t-1} + b_f)
         r_t = sigmoid(ur_t + v_r * c_{t-1} + b_r)
         c_t = f_t * c_{t-1} + (1 - f_t) * uw_t
         h_t = r_t * c_t
+    The r gate is part of the contract: the model applies the highway skip
+    h_t + (1 - r_t) * x_t outside the scan when input width == n.
     """
     B, T, n = uw.shape
     c = jnp.zeros((B, n), jnp.float32) if c0 is None else c0
@@ -73,9 +75,9 @@ def sru_scan_ref(uw, uf, ur, v_f, v_r, b_f, b_r, c0=None):
         f = jax.nn.sigmoid(uf_t + v_f * c + b_f)
         r = jax.nn.sigmoid(ur_t + v_r * c + b_r)
         c_new = f * c + (1.0 - f) * uw_t
-        return c_new, r * c_new
+        return c_new, (r * c_new, r)
 
-    c_last, h = jax.lax.scan(
+    c_last, (h, r) = jax.lax.scan(
         step, c, (uw.transpose(1, 0, 2), uf.transpose(1, 0, 2),
                   ur.transpose(1, 0, 2)))
-    return h.transpose(1, 0, 2), c_last
+    return h.transpose(1, 0, 2), r.transpose(1, 0, 2), c_last

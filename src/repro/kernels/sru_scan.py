@@ -6,8 +6,22 @@ HBM this re-reads the gate vectors and state every step; the kernel keeps
 the state c and the per-channel vectors v_f, v_r, b_f, b_r resident in VMEM
 across all T steps and streams u tiles through — one HBM pass over the data.
 
-Grid: (B/bb, n/bn); each program owns a (bb, T, bn) tile of the three u
-streams and scans T in a fori_loop with the carry in registers/VMEM.
+Outputs are (h, r, c_last): the reset gate r is emitted alongside h because
+the SRU highway connection h_t = r_t*c_t + (1-r_t)*x_t needs it whenever the
+layer input width equals the hidden width — the caller applies the skip
+outside the kernel (x is not streamed through VMEM).
+
+Grid layouts:
+- ``sru_scan``: grid (B/bb, n/bn); each program owns a (bb, T, bn) tile of
+  the three u streams and scans T in a fori_loop with the carry in
+  registers/VMEM.
+- ``sru_scan_pop``: grid (P, B/bb, n/bn) — the leading *population* axis
+  maps one GA candidate (one quantization allocation) per grid step, so a
+  whole population of quantized forwards feeds the compute units directly
+  instead of vmapping over ``pallas_call``. Block shapes are
+  (1, bb, T, bn) for the streams; the per-channel vectors are shared across
+  the population (same underlying weights, per-candidate quantization is
+  applied to the u streams upstream).
 """
 from __future__ import annotations
 
@@ -20,7 +34,7 @@ from jax.experimental import pallas as pl
 
 
 def _sru_kernel(uw_ref, uf_ref, ur_ref, vf_ref, vr_ref, bf_ref, br_ref,
-                h_ref, cl_ref):
+                h_ref, r_ref, cl_ref):
     T = uw_ref.shape[1]
     vf = vf_ref[...]
     vr = vr_ref[...]
@@ -37,6 +51,8 @@ def _sru_kernel(uw_ref, uf_ref, ur_ref, vf_ref, vr_ref, bf_ref, br_ref,
         c_new = f * c + (1.0 - f) * uw_t
         pl.store(h_ref, (slice(None), pl.ds(t, 1), slice(None)),
                  (r * c_new)[:, None])
+        pl.store(r_ref, (slice(None), pl.ds(t, 1), slice(None)),
+                 r[:, None])
         return c_new
 
     c_last = jax.lax.fori_loop(0, T, body, c0)
@@ -45,7 +61,8 @@ def _sru_kernel(uw_ref, uf_ref, ur_ref, vf_ref, vr_ref, bf_ref, br_ref,
 
 def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r,
              block: Tuple[int, int] = (8, 128), interpret: bool = False):
-    """uw/uf/ur: (B, T, n) f32. v/b: (n,) f32. Returns (h (B,T,n), c_last).
+    """uw/uf/ur: (B, T, n) f32. v/b: (n,) f32.
+    Returns (h (B,T,n), r (B,T,n), c_last (B,n)).
 
     B and n must divide the block sizes (ops.sru_scan pads for you)."""
     B, T, n = uw.shape
@@ -58,8 +75,66 @@ def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r,
         _sru_kernel,
         grid=grid,
         in_specs=[stream, stream, stream, vec, vec, vec, vec],
-        out_specs=[stream, pl.BlockSpec((bb, bn), lambda i, j: (i, j))],
+        out_specs=[stream, stream,
+                   pl.BlockSpec((bb, bn), lambda i, j: (i, j))],
         out_shape=[jax.ShapeDtypeStruct((B, T, n), jnp.float32),
+                   jax.ShapeDtypeStruct((B, T, n), jnp.float32),
                    jax.ShapeDtypeStruct((B, n), jnp.float32)],
+        interpret=interpret,
+    )(uw, uf, ur, v_f, v_r, b_f, b_r)
+
+
+def _sru_kernel_pop(uw_ref, uf_ref, ur_ref, vf_ref, vr_ref, bf_ref, br_ref,
+                    h_ref, r_ref, cl_ref):
+    # stream blocks are (1, bb, T, bn): one population lane per grid step
+    T = uw_ref.shape[2]
+    vf = vf_ref[...]
+    vr = vr_ref[...]
+    bf = bf_ref[...]
+    br = br_ref[...]
+    c0 = jnp.zeros((uw_ref.shape[1], uw_ref.shape[3]), jnp.float32)
+
+    def body(t, c):
+        idx = (slice(None), slice(None), pl.ds(t, 1), slice(None))
+        uw_t = pl.load(uw_ref, idx)[0, :, 0]
+        uf_t = pl.load(uf_ref, idx)[0, :, 0]
+        ur_t = pl.load(ur_ref, idx)[0, :, 0]
+        f = jax.nn.sigmoid(uf_t + vf * c + bf)
+        r = jax.nn.sigmoid(ur_t + vr * c + br)
+        c_new = f * c + (1.0 - f) * uw_t
+        pl.store(h_ref, idx, (r * c_new)[None, :, None])
+        pl.store(r_ref, idx, r[None, :, None])
+        return c_new
+
+    c_last = jax.lax.fori_loop(0, T, body, c0)
+    cl_ref[...] = c_last[None]
+
+
+def sru_scan_pop(uw, uf, ur, v_f, v_r, b_f, b_r,
+                 block: Tuple[int, int] = (8, 128),
+                 interpret: bool = False):
+    """Population-axis SRU scan: uw/uf/ur are (P, B, T, n) f32 — one
+    quantization candidate per leading lane — and v/b: (n,) f32 shared
+    across lanes. Returns (h (P,B,T,n), r (P,B,T,n), c_last (P,B,n)).
+
+    The grid is (P, B/bb, n/bn): the population axis is a first-class grid
+    dimension, so on real accelerators P candidates stream through the MXU
+    pipeline back-to-back rather than being expanded by a vmap-of-kernels.
+    B and n must divide the block sizes (ops.sru_scan_pop pads for you)."""
+    P, B, T, n = uw.shape
+    bb, bn = block
+    assert B % bb == 0 and n % bn == 0, (uw.shape, block)
+    grid = (P, B // bb, n // bn)
+    stream = pl.BlockSpec((1, bb, T, bn), lambda p, i, j: (p, i, 0, j))
+    vec = pl.BlockSpec((bn,), lambda p, i, j: (j,))
+    return pl.pallas_call(
+        _sru_kernel_pop,
+        grid=grid,
+        in_specs=[stream, stream, stream, vec, vec, vec, vec],
+        out_specs=[stream, stream,
+                   pl.BlockSpec((1, bb, bn), lambda p, i, j: (p, i, j))],
+        out_shape=[jax.ShapeDtypeStruct((P, B, T, n), jnp.float32),
+                   jax.ShapeDtypeStruct((P, B, T, n), jnp.float32),
+                   jax.ShapeDtypeStruct((P, B, n), jnp.float32)],
         interpret=interpret,
     )(uw, uf, ur, v_f, v_r, b_f, b_r)

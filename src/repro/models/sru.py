@@ -141,7 +141,10 @@ def _sru_dir(dp, x, *, reverse: bool, quant16_vectors: bool,
 
     if use_kernel:
         from repro.kernels import ops as kops
-        h = kops.sru_scan(uw, uf, ur, v[0], v[1], b[0], b[1])
+        h, r = kops.sru_scan(uw, uf, ur, v[0], v[1], b[0], b[1])
+        if x.shape[-1] == n:                                  # highway skip
+            xx = x[:, ::-1] if reverse else x
+            h = h + (1.0 - r) * xx
     else:
         def step(c, ufr):
             uw_t, uf_t, ur_t = ufr
@@ -211,32 +214,43 @@ def forward(params, cfg: SRUModelConfig, feats,
     """
     quantized = qspec is not None or qp is not None
 
-    def prep(name, x, p_w):
-        w = p_w
-        if calibrator is not None:
-            calibrator.observe(name, x)
+    # Weight and activation quantization are split so each layer's input is
+    # observed/quantized exactly ONCE even when several weight matrices share
+    # it (Bi-SRU fwd + bwd): observing per-weight would record every
+    # activation twice and skew the median-of-max calibration statistics.
+    def prep_w(name, w):
         if qp is not None and name in qp:
-            ws, wl, wh, as_, al, ah = qp[name]
-            w = Q.fake_quant_triple(w, ws, wl, wh)
-            x = Q.fake_quant_triple(x, as_, al, ah)
-        elif qspec is not None and name in qspec:
-            wb, ab = qspec[name]
+            ws, wl, wh, _as, _al, _ah = qp[name]
+            return Q.fake_quant_triple(w, ws, wl, wh)
+        if qspec is not None and name in qspec:
+            wb, _ab = qspec[name]
             clip = (wclips or {}).get(name)
             if clip is None and wb != 16:
                 clip = Q.mmse_clip(np.asarray(w), wb)
-            w = Q.ste_quantize_weight(w, wb, clip)
+            return Q.ste_quantize_weight(w, wb, clip)
+        return w
+
+    def prep_x(name, x):
+        if calibrator is not None:
+            calibrator.observe(name, x)
+        if qp is not None and name in qp:
+            _ws, _wl, _wh, as_, al, ah = qp[name]
+            return Q.fake_quant_triple(x, as_, al, ah)
+        if qspec is not None and name in qspec:
+            _wb, ab = qspec[name]
             rng = (act_ranges or {}).get(name)
             if rng is None:
                 rng = float(jnp.max(jnp.abs(x)))
-            x = Q.quantize_activation(x, ab, rng)
-        return x, w
+            return Q.quantize_activation(x, ab, rng)
+        return x
 
     x = feats
     for i in range(cfg.n_sru_layers):
         name = f"L{i}"
         lp = params[name]
-        xq_f, wf = prep(name, x, lp["fwd"]["W"])
-        _, wb_ = prep(name, x, lp["bwd"]["W"])
+        xq_f = prep_x(name, x)
+        wf = prep_w(name, lp["fwd"]["W"])
+        wb_ = prep_w(name, lp["bwd"]["W"])
         fw = _sru_dir({**lp["fwd"], "W": wf}, xq_f, reverse=False,
                       quant16_vectors=quantized, use_kernel=use_kernel)
         bw = _sru_dir({**lp["bwd"], "W": wb_}, xq_f, reverse=True,
@@ -244,37 +258,147 @@ def forward(params, cfg: SRUModelConfig, feats,
         x = jnp.concatenate([fw, bw], axis=-1)                # (B,T,2n)
         if i < cfg.n_sru_layers - 1:
             pname = f"Pr{i + 1}"
-            xq, w = prep(pname, x, params[pname]["W"])
-            x = jnp.einsum("btm,mp->btp", xq, w)
-    xq, w = prep("FC", x, params["FC"]["W"])
-    logits = jnp.einsum("btm,mo->bto", xq, w) + params["FC"]["b"]
+            xq = prep_x(pname, x)
+            x = jnp.einsum("btm,mp->btp", xq, prep_w(pname, params[pname]["W"]))
+    xq = prep_x("FC", x)
+    logits = jnp.einsum("btm,mo->bto", xq, prep_w("FC", params["FC"]["W"])) \
+        + params["FC"]["b"]
     return logits
 
 
 def forward_population(params, cfg: SRUModelConfig, feats, qp_stack,
-                       use_kernel: bool = False):
+                       use_kernel: bool = False, fused: bool = True):
     """Population-parameterized forward: score P quantization candidates in
-    ONE jitted call by vmapping the quantized forward over the grid axis.
+    ONE jitted call.
 
     ``qp_stack``: (P, L, 6) float32 — for each candidate (population lane)
     and each layer in ``cfg.layer_names()`` order, the dynamic
     (w_scale, w_lo, w_hi, a_scale, a_lo, a_hi) grids produced by
     ``quant_triples_for``. Params and feats are closed over (broadcast, not
-    vmapped): XLA batches the MxV einsums into single P-wide matmuls and
-    batches each recurrent scan's carry across lanes, so one dispatch scores
-    the whole population. Because each lane runs the exact ``forward(qp=)``
-    arithmetic, per-candidate error counts are bit-identical to the scalar
-    path (hand-rolled fold-the-population-into-the-batch-axis variants were
-    measured slower than XLA's own scan batching on CPU and are not kept).
-    Returns logits (P, B, T, n_outputs).
+    vmapped). Returns logits (P, B, T, n_outputs).
+
+    Three lowerings, all computing bit-identical per-element arithmetic to
+    the scalar ``forward(qp=)`` path (the GA's Pareto fronts are exact):
+
+    - ``fused=False, use_kernel=False``: the PR-1 reference — ``jax.vmap``
+      of the scalar forward over the grid axis (XLA batches the einsums and
+      scans itself). Kept for benchmarking/regression comparison.
+    - ``fused=True`` (default): explicit population axis. The MxV einsums
+      become P-batched matmuls and each Bi-SRU layer's two direction scans
+      are fused into ONE ``lax.scan`` over a stacked direction axis with a
+      small unroll — half the sequential while-loop steps of the vmap path.
+      Fusing a leading axis and unrolling never change per-element
+      arithmetic, so results stay bitwise equal to the scalar path.
+    - ``use_kernel=True``: same explicit population axis, but the recurrence
+      runs in the Pallas population-axis kernel (``kernels.ops.sru_scan_pop``)
+      whose grid is (P, B/bb, n/bn) — the population feeds the kernel grid
+      directly instead of vmapping over ``pallas_call``. In interpret mode
+      the kernel body mirrors the jnp scan step exactly.
     """
-    names = cfg.layer_names()
+    if not fused and not use_kernel:
+        names = cfg.layer_names()
 
-    def one(qp_rows):                                      # (L, 6) per lane
-        qp = {n: qp_rows[i] for i, n in enumerate(names)}
-        return forward(params, cfg, feats, qp=qp, use_kernel=use_kernel)
+        def one(qp_rows):                                  # (L, 6) per lane
+            qp = {n: qp_rows[i] for i, n in enumerate(names)}
+            return forward(params, cfg, feats, qp=qp)
 
-    return jax.vmap(one)(qp_stack)
+        return jax.vmap(one)(qp_stack)
+    return _forward_population_fused(params, cfg, feats, qp_stack,
+                                     use_kernel=use_kernel)
+
+
+# scan unroll for the fused population path: amortizes XLA while-loop
+# overhead without changing arithmetic (unrolling is exact)
+_POP_SCAN_UNROLL = 4
+
+
+def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
+                              use_kernel: bool = False):
+    """Explicit population-axis forward (see ``forward_population``).
+
+    feats (B, T, m) is broadcast to (P, B, T, m); per-lane weight/activation
+    grids come from qp_stack rows. Each Bi-SRU layer runs its two direction
+    recurrences either fused into one scan over a stacked direction axis
+    (jnp path) or through the population-axis Pallas kernel (one call per
+    direction, grid (P, B/bb, n/bn))."""
+    names = list(cfg.layer_names())
+    li = {n: i for i, n in enumerate(names)}
+    P = qp_stack.shape[0]
+    n = cfg.hidden
+
+    def q_act(name, x):                       # per-lane activation grids
+        row = qp_stack[:, li[name]]
+        return jax.vmap(Q.fake_quant_triple)(x, row[:, 3], row[:, 4],
+                                             row[:, 5])
+
+    def q_w(name, w):                         # per-lane weight grids
+        row = qp_stack[:, li[name]]
+        return jax.vmap(lambda s, lo, hi: Q.fake_quant_triple(w, s, lo, hi))(
+            row[:, 0], row[:, 1], row[:, 2])
+
+    def mxv(xq, wq):                          # (P,B,T,m) @ (P,m,h)
+        out = jnp.matmul(xq.reshape(P, -1, xq.shape[-1]), wq)
+        return out.reshape(xq.shape[:3] + (wq.shape[-1],))
+
+    x = jnp.broadcast_to(feats, (P,) + feats.shape)          # (P,B,T,m)
+    for i in range(cfg.n_sru_layers):
+        name = f"L{i}"
+        lp = params[name]
+        xq = q_act(name, x)
+        streams, vecs = [], []
+        for key in ("fwd", "bwd"):
+            dp = lp[key]
+            u = mxv(xq, q_w(name, dp["W"]))                  # (P,B,T,3n)
+            uw, uf, ur = u[..., :n], u[..., n:2 * n], u[..., 2 * n:]
+            if key == "bwd":
+                uw, uf, ur = uw[:, :, ::-1], uf[:, :, ::-1], ur[:, :, ::-1]
+            streams.append((uw, uf, ur))
+            vecs.append((Q.fixed_point_16(dp["v"]),
+                         Q.fixed_point_16(dp["b"])))
+
+        if use_kernel:
+            from repro.kernels import ops as kops
+            hs = []
+            for (uw, uf, ur), (v, b) in zip(streams, vecs):
+                h, r = kops.sru_scan_pop(uw, uf, ur, v[0], v[1], b[0], b[1])
+                if x.shape[-1] == n:                         # highway skip
+                    hs_in = xq if len(hs) == 0 else xq[:, :, ::-1]
+                    h = h + (1.0 - r) * hs_in
+                hs.append(h)
+        else:
+            # both directions in ONE scan: stack on a leading dir axis
+            UW, UF, UR = (jnp.stack([s[k] for s in streams])
+                          for k in range(3))                 # (2,P,B,T,n)
+            VF, VR = (jnp.stack([v[0] for v, _ in vecs])[:, None, None],
+                      jnp.stack([v[1] for v, _ in vecs])[:, None, None])
+            BF, BR = (jnp.stack([b[0] for _, b in vecs])[:, None, None],
+                      jnp.stack([b[1] for _, b in vecs])[:, None, None])
+
+            def step(c, t3):
+                uw_t, uf_t, ur_t = t3                        # (2,P,B,n)
+                f = jax.nn.sigmoid(uf_t + VF * c + BF)
+                r = jax.nn.sigmoid(ur_t + VR * c + BR)
+                c_new = f * c + (1.0 - f) * uw_t
+                return c_new, (r * c_new, r)
+
+            c0 = jnp.zeros((2, P, x.shape[1], n), jnp.float32)
+            _, (h, r) = jax.lax.scan(
+                step, c0,
+                (UW.transpose(3, 0, 1, 2, 4), UF.transpose(3, 0, 1, 2, 4),
+                 UR.transpose(3, 0, 1, 2, 4)),
+                unroll=_POP_SCAN_UNROLL)
+            h = h.transpose(1, 2, 3, 0, 4)                   # (2,P,B,T,n)
+            r = r.transpose(1, 2, 3, 0, 4)
+            if x.shape[-1] == n:                             # highway skip
+                h = h.at[0].add((1.0 - r[0]) * xq)
+                h = h.at[1].add((1.0 - r[1]) * xq[:, :, ::-1])
+            hs = [h[0], h[1]]
+        x = jnp.concatenate([hs[0], hs[1][:, :, ::-1]], axis=-1)
+        if i < cfg.n_sru_layers - 1:
+            pname = f"Pr{i + 1}"
+            x = mxv(q_act(pname, x), q_w(pname, params[pname]["W"]))
+    xq = q_act("FC", x)
+    return mxv(xq, q_w("FC", params["FC"]["W"])) + params["FC"]["b"]
 
 
 def calibrate(params, cfg: SRUModelConfig, feats_batches) -> Dict[str, float]:

@@ -248,8 +248,12 @@ def cache_axes(cfg: ArchConfig):
     return {"attn": kvax, "cur": ()}
 
 
-def decode_step(params, cfg: ArchConfig, cache, token):
-    """One decode step. token: (B, 1) int32. Returns (logits, new_cache)."""
+def decode_step(params, cfg: ArchConfig, cache, token, head_fn=None):
+    """One decode step. token: (B, 1) int32. Returns (logits, new_cache).
+
+    ``head_fn(hidden) -> logits`` overrides the dense output head — e.g. to
+    route the final matmul through a quantized kernel (see
+    examples/serve_quantized.py)."""
     x = embed_tokens(params, cfg, token)
     cur = cache["cur"]
 
@@ -284,11 +288,15 @@ def decode_step(params, cfg: ArchConfig, cache, token):
         new_cache = {"attn": new_kv, "cur": cur + 1}
 
     x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if head_fn is not None:
+        return head_fn(x), new_cache
     return logits_head(params, cfg, x), new_cache
 
 
-def prefill(params, cfg: ArchConfig, tokens, max_len: Optional[int] = None):
+def prefill(params, cfg: ArchConfig, tokens, max_len: Optional[int] = None,
+            head_fn=None):
     """Run the full prompt, build a cache. Returns (last_logits, cache).
+    ``head_fn`` overrides the dense output head (see decode_step).
 
     Baseline implementation recomputes per-layer K/V through the stack scan
     (cache written as scan ys) — the cheap standard approach.
@@ -325,7 +333,9 @@ def prefill(params, cfg: ArchConfig, tokens, max_len: Optional[int] = None):
             {"mamba_blocks": params["mamba_blocks"],
              "attn_blocks": params["attn_blocks"]})
         x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = logits_head(params, cfg, x[:, -1:])
+        last = x[:, -1:]
+        logits = head_fn(last) if head_fn is not None \
+            else logits_head(params, cfg, last)
         # scan stacks states as (G, P-1, ...)
         cache = {"attn": kvs,
                  "ssm": {"h": ssm["h"],
@@ -338,6 +348,8 @@ def prefill(params, cfg: ArchConfig, tokens, max_len: Optional[int] = None):
         return attn_block_fwd(bp, cfg, h, positions), kv
     x, kvs = jax.lax.scan(body, x, params["blocks"])
     x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = logits_head(params, cfg, x[:, -1:])
+    last = x[:, -1:]
+    logits = head_fn(last) if head_fn is not None \
+        else logits_head(params, cfg, last)
     cache = {"attn": kvs, "cur": jnp.asarray(T, jnp.int32)}
     return logits, cache

@@ -60,6 +60,29 @@ class TestErrorParity:
         batched = trained.val_error_batch(allocs)
         assert scalar == batched
 
+    def test_all_population_lowerings_bit_identical(self, trained, problem):
+        """The three forward_population lowerings — PR-1 vmap, v2 fused
+        (direction-fused scan, population-batched matmuls) and the Pallas
+        population-axis kernel — all reproduce the scalar error counts."""
+        import jax.numpy as jnp
+        from repro.models import sru
+
+        allocs = _random_allocs(problem, 5, seed=9)
+        scalar = [trained.val_error(a) for a in allocs]
+        assert trained.val_error_batch(allocs, fused=False) == scalar
+        assert trained.val_error_batch(allocs, fused=True) == scalar
+        # kernel path (interpret mode): logits must match the fused path
+        qp_stack = jnp.asarray(BE.stack_qps(
+            [trained.qp_for(a) for a in allocs],
+            list(trained.cfg.layer_names())))
+        feats = trained.val_subsets[0][0]
+        l_fused = sru.forward_population(trained.params, trained.cfg, feats,
+                                         qp_stack, fused=True)
+        l_kern = sru.forward_population(trained.params, trained.cfg, feats,
+                                        qp_stack, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(l_kern), np.asarray(l_fused),
+                                   rtol=1e-5, atol=1e-5)
+
     def test_evaluate_population_matches_evaluate(self, problem):
         rng = np.random.default_rng(5)
         genomes = [rng.integers(1, 5, problem.n_var) for _ in range(6)]
@@ -77,6 +100,7 @@ class TestErrorParity:
         sram = int((mat * 2.5 + vec * 16) / 8)    # tight: most allocs fail
         prob = X.build_problem(trained, X.BITFUSION, ("error", "speedup"),
                                sram_override=sram)
+        prob.error_memo = {}          # isolate from the shared memo
         calls = []
         orig = prob.batch_error_fn
         prob.batch_error_fn = lambda allocs: (calls.append(len(allocs)),
@@ -100,6 +124,8 @@ class TestSearchParity:
         prob_s = X.build_problem(trained, X.BITFUSION, ("error", "speedup"),
                                  batched=False)
         prob_b = X.build_problem(trained, X.BITFUSION, ("error", "speedup"))
+        prob_s.error_memo = {}
+        prob_b.error_memo = {}
         rs = run_search(prob_s, **kw)
         rb = run_search(prob_b, **kw)
         assert rs.n_evals == rb.n_evals
@@ -107,6 +133,61 @@ class TestSearchParity:
                                   tuple(i.objectives.tolist()),
                                   float(i.violation)) for i in res.pareto)
         assert key(rs) == key(rb)
+
+    def test_memoized_search_matches_pr1_evaluator(self, trained):
+        """The memoized v2 pipeline returns a bit-identical Pareto front to
+        PR 1's vmap evaluator, and the run logs a consistent cache-hit
+        count (requested = unique evals + genome cache hits)."""
+        kw = dict(n_generations=5, pop_size=6, initial_pop_size=10, seed=7)
+        prob_v1 = X.build_problem(trained, X.BITFUSION, ("error", "speedup"))
+        prob_v1.batch_error_fn = \
+            lambda allocs: trained.val_error_batch(allocs, fused=False)
+        prob_v1.error_memo = {}
+        prob_v2 = X.build_problem(trained, X.BITFUSION, ("error", "speedup"))
+        prob_v2.error_memo = {}
+        logs = []
+        r1 = run_search(prob_v1, **kw)
+        r2 = run_search(prob_v2, log=logs.append, **kw)
+        key = lambda res: sorted((tuple(i.genome.tolist()),
+                                  tuple(i.objectives.tolist()),
+                                  float(i.violation)) for i in res.pareto)
+        assert key(r1) == key(r2)
+        requested = 10 + 5 * 6
+        assert r2.n_evals + r2.n_cache_hits == requested
+        assert any("cache_hits=" in line for line in logs)
+
+    def test_shared_memo_across_platform_sweep(self, trained):
+        """Base-params error evals are shared across searches built from
+        one trained model: a second platform's search re-hits memoized
+        allocations instead of re-scoring them."""
+        memo_before = dict(trained.shared_error_memo)
+        prob_a = X.build_problem(trained, X.BITFUSION, ("error", "speedup"))
+        genomes = [np.asarray([g] * prob_a.n_var) for g in (1, 2, 3)]
+        prob_a.evaluate_population(genomes)
+        prob_b = X.build_problem(trained, X.BITFUSION, ("error", "memory"))
+        prob_b.evaluate_population(genomes)
+        assert prob_b.memo_hits >= len(genomes)
+        trained.shared_error_memo.clear()
+        trained.shared_error_memo.update(memo_before)
+
+
+class TestBeaconGroupedSearch:
+    def test_grouped_matches_detached(self, trained):
+        """Beacon-grouped batched evaluation reproduces the detached
+        per-candidate path exactly on a seeded search: identical retrain
+        count AND bit-identical Pareto front."""
+        kw = dict(generations=2, pop=6, initial=8, seed=0, retrain_steps=3)
+        r_det, bs_det = X.experiment3_bitfusion(trained, beacon=True,
+                                                batched=False, **kw)
+        r_grp, bs_grp = X.experiment3_bitfusion(trained, beacon=True,
+                                                batched=True, **kw)
+        assert bs_det.n_retrains == bs_grp.n_retrains
+        assert len(bs_det.beacons) == len(bs_grp.beacons)
+        key = lambda res: sorted((tuple(i.genome.tolist()),
+                                  tuple(i.objectives.tolist()),
+                                  float(i.violation)) for i in res.pareto)
+        assert key(r_det) == key(r_grp)
+        assert r_det.n_evals == r_grp.n_evals
 
 
 class TestNSGA2BatchHook:

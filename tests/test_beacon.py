@@ -94,3 +94,72 @@ class TestAlgorithm1:
             gains.append(base_e - 10.0)
             recoveries.append(base_e - e)
         assert recoveries[0] > recoveries[1] > 0
+
+
+class TestGroupedBatch:
+    """Beacon-grouped batched evaluation == the sequential scalar path."""
+
+    err = TestAlgorithm1.err
+    make = TestAlgorithm1.make
+
+    def make_grouped(self, threshold=6.0, max_beacons=8):
+        fr = FakeRetrainer()
+        prob = make_problem(lambda a: 0.0)
+        calls = []
+
+        def batch_err(params, allocs):
+            calls.append(len(allocs))
+            return [self.err(params, a) for a in allocs]
+
+        bs = BeaconSearch(problem=prob, base_params="base",
+                          retrain_fn=fr.retrain,
+                          error_with_params=self.err,
+                          batch_error_with_params=batch_err,
+                          distance_threshold=threshold,
+                          min_error_gain_to_retrain=0.5,
+                          max_beacons=max_beacons)
+        return bs, fr, calls
+
+    def _mixed_allocs(self):
+        mk = lambda b: {f"L{i}": (b, 8) for i in range(8)}
+        return [
+            mk(16),                       # no error gain: skip retraining
+            mk(2),                        # far: becomes beacon 0
+            dict(mk(2), L0=(4, 8)),       # near beacon 0: reuses it
+            mk(8),                        # far: becomes beacon 1
+            dict(mk(8), L1=(4, 8)),       # near beacon 1
+            dict(mk(2), L1=(4, 8)),       # near beacon 0 again
+        ]
+
+    def test_batch_equals_sequential(self):
+        allocs = self._mixed_allocs()
+        bs_seq, fr_seq = self.make(threshold=3.0)
+        seq = [bs_seq.error_fn(a) for a in allocs]
+        bs_grp, fr_grp, calls = self.make_grouped(threshold=3.0)
+        grp = bs_grp.batch_error_fn(allocs)
+        assert seq == grp
+        assert fr_seq.calls == fr_grp.calls == bs_grp.n_retrains == 2
+        assert [b.alloc for b in bs_seq.beacons] == \
+            [b.alloc for b in bs_grp.beacons]
+        # one base batch + one batch per touched beacon (the
+        # beacon-creating candidate joins its own beacon's group)
+        assert calls == [len(allocs), 3, 2]
+
+    def test_budget_exhausted_groups_to_nearest(self):
+        allocs = self._mixed_allocs()
+        bs_grp, fr_grp, _ = self.make_grouped(threshold=3.0, max_beacons=1)
+        bs_seq, fr_seq = self.make(threshold=3.0)
+        bs_seq.max_beacons = 1
+        grp = bs_grp.batch_error_fn(allocs)
+        seq = [bs_seq.error_fn(a) for a in allocs]
+        assert grp == seq
+        assert fr_grp.calls == fr_seq.calls == 1
+
+    def test_attach_wires_grouped_batching(self):
+        bs, _, _ = self.make_grouped()
+        prob = bs.attach()
+        assert prob.batch_error_fn is not None
+        assert prob.error_memo == {}
+        bs2, _ = self.make()              # no batch_error_with_params
+        prob2 = bs2.attach()
+        assert prob2.batch_error_fn is None

@@ -87,9 +87,11 @@ class TestSRUScan:
         uw, uf, ur = (jax.random.normal(k, (b, t, n)) for k in ks[:3])
         vf, vr = (jax.random.normal(k, (n,)) * 0.1 for k in ks[3:5])
         bf, br = jnp.zeros(n), jnp.full((n,), 0.5)
-        h_ref, _ = ref.sru_scan_ref(uw, uf, ur, vf, vr, bf, br)
-        h_k = ops.sru_scan(uw, uf, ur, vf, vr, bf, br, interpret=True)
+        h_ref, r_ref, _ = ref.sru_scan_ref(uw, uf, ur, vf, vr, bf, br)
+        h_k, r_k = ops.sru_scan(uw, uf, ur, vf, vr, bf, br, interpret=True)
         np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_ref),
                                    rtol=1e-5, atol=1e-5)
 
     def test_final_state(self):
@@ -99,9 +101,9 @@ class TestSRUScan:
         vf = jnp.ones(n) * 0.1
         vr = jnp.ones(n) * -0.1
         z = jnp.zeros(n)
-        _, c_ref = ref.sru_scan_ref(uw, uf, ur, vf, vr, z, z)
-        _, c_k = raw_sru(uw, uf, ur, vf, vr, z, z, block=(2, n),
-                         interpret=True)
+        _, _, c_ref = ref.sru_scan_ref(uw, uf, ur, vf, vr, z, z)
+        *_, c_k = raw_sru(uw, uf, ur, vf, vr, z, z, block=(2, n),
+                          interpret=True)
         np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_ref),
                                    rtol=1e-5, atol=1e-5)
 
@@ -116,3 +118,61 @@ class TestSRUScan:
         y_kern = sru_model.forward(params, cfg, feats, use_kernel=True)
         np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_scan),
                                    rtol=1e-4, atol=1e-4)
+
+    def test_model_integration_highway(self):
+        """input_dim == hidden engages the highway skip h + (1-r)*x: the
+        kernel path must carry the r gate out of the scan (regression for
+        the dropped-highway bug)."""
+        from repro.models import sru as sru_model
+        cfg = sru_model.SRUModelConfig(input_dim=16, hidden=16, proj=8,
+                                       n_sru_layers=2, n_outputs=10)
+        params = sru_model.init_params(jax.random.PRNGKey(0), cfg)
+        feats = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 16))
+        y_scan = sru_model.forward(params, cfg, feats, use_kernel=False)
+        y_kern = sru_model.forward(params, cfg, feats, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_scan),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestSRUScanPop:
+    """Population-axis kernel: grid (P, B/bb, n/bn), one candidate's u
+    streams per leading lane, shared per-channel vectors."""
+
+    @pytest.mark.parametrize("p,b,t,n", [(1, 2, 5, 8), (4, 3, 17, 50),
+                                         (5, 8, 9, 128)])
+    def test_vs_ref_per_lane(self, p, b, t, n):
+        ks = jax.random.split(jax.random.PRNGKey(p * b * t * n), 5)
+        uw, uf, ur = (jax.random.normal(k, (p, b, t, n)) for k in ks[:3])
+        vf, vr = (jax.random.normal(k, (n,)) * 0.1 for k in ks[3:5])
+        bf, br = jnp.zeros(n), jnp.full((n,), 0.25)
+        h_k, r_k = ops.sru_scan_pop(uw, uf, ur, vf, vr, bf, br,
+                                    interpret=True)
+        for lane in range(p):
+            h_ref, r_ref, _ = ref.sru_scan_ref(uw[lane], uf[lane], ur[lane],
+                                               vf, vr, bf, br)
+            np.testing.assert_allclose(np.asarray(h_k[lane]),
+                                       np.asarray(h_ref),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(r_k[lane]),
+                                       np.asarray(r_ref),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_raw_grid_aligned(self):
+        """Raw pop kernel (no padding) at aligned sizes, incl. c_last."""
+        from repro.kernels.sru_scan import sru_scan_pop as raw_pop
+        p, b, t, n = 3, 4, 7, 16
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        uw, uf, ur = (jax.random.normal(k, (p, b, t, n)) for k in ks)
+        vf = jnp.ones(n) * 0.2
+        z = jnp.zeros(n)
+        h_k, r_k, c_k = raw_pop(uw, uf, ur, vf, vf, z, z, block=(2, 8),
+                                interpret=True)
+        for lane in range(p):
+            h_ref, r_ref, c_ref = ref.sru_scan_ref(uw[lane], uf[lane],
+                                                   ur[lane], vf, vf, z, z)
+            np.testing.assert_allclose(np.asarray(h_k[lane]),
+                                       np.asarray(h_ref),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(c_k[lane]),
+                                       np.asarray(c_ref),
+                                       rtol=1e-5, atol=1e-5)

@@ -94,3 +94,19 @@ class TestCalibration:
         for v in (1.0, 5.0, 2.0):
             cal.observe("x", jnp.asarray([v]))
         assert cal.expected_ranges()["x"] == 2.0
+
+    def test_each_layer_observed_once_per_forward(self, small):
+        """Bi-SRU layers quantize two weight matrices against ONE shared
+        input; the calibrator must record that input once per layer, not
+        once per weight matrix (double observation skews the median-of-max
+        range statistics)."""
+        from repro.core.quantization import ActRangeCalibrator
+        cfg, params = small
+        feats = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 8))
+        cal = ActRangeCalibrator()
+        n_calls = 3
+        for _ in range(n_calls):
+            sru.forward(params, cfg, feats, calibrator=cal)
+        assert set(cal._ranges) == set(cfg.layer_names())
+        for name, vals in cal._ranges.items():
+            assert len(vals) == n_calls, (name, len(vals))

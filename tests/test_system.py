@@ -9,13 +9,16 @@ import pytest
 from repro.core import sru_experiment as X
 from repro.core.nsga2 import pareto_front
 
+# whole-module slow mark: training loops + end-to-end searches; the fast
+# tier-1 lane (`pytest -m "not slow"`, see ROADMAP.md) skips this file
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def trained():
     return X.train_small_sru(steps=120)
 
 
-@pytest.mark.slow
 class TestEndToEnd:
     def test_training_learns(self, trained):
         # far better than chance (n_outputs classes)
