@@ -3,7 +3,12 @@ search throughput benches and the dry-run roofline table.
 
 Prints ``name,us_per_call,derived`` CSV rows (assignment contract).
 
-  PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run [--full|--quick]
+
+``--quick`` is the CI lane (tools/check.sh): it skips the full-shape
+evaluation rows and the end-to-end figure searches, trims timing trials,
+and leaves BENCH_search_throughput.json untouched — the regression gate
+still runs against the stored reference ratios.
 """
 from __future__ import annotations
 
@@ -12,7 +17,9 @@ import glob
 import json
 import os
 import statistics
+import subprocess
 import sys
+import textwrap
 import time
 
 import jax
@@ -180,7 +187,86 @@ def kernel_sru_scan():
     emit("kernel_sru_scan", us, f"B={B};T={T};n={n};interpret_mode=True")
 
 
-def search_pipeline_v2(full: bool = False) -> bool:
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json, time
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core import sru_experiment as X
+    from repro.data import synthetic
+    from repro.launch.mesh import make_population_mesh
+
+    STEPS, TRIALS = %d, %d
+    trained = X.train_small_sru(steps=STEPS)
+    raw, _ = synthetic.speech_eval_sets(trained.task, batch=1, seq=24)
+    stack = lambda bs: (
+        jnp.concatenate([x["feats"] for x in bs])[:1, :24],
+        jnp.concatenate([x["labels"] for x in bs])[:1, :24])
+    compact = dataclasses.replace(trained,
+                                  val_subsets=[stack(s) for s in raw])
+    prob = X.build_problem(compact, X.BITFUSION, ("error", "speedup"))
+    mesh = make_population_mesh()
+    rng = np.random.default_rng(0)
+    med = lambda xs: sorted(xs)[len(xs) // 2]
+    rows = []
+    for pop in (16, 32):
+        allocs = [prob.decode(prob._snap(rng.integers(1, 5, prob.n_var)))
+                  for _ in range(pop)]
+        ref = compact.val_error_batch(allocs)            # warm single-dev
+        shard = compact.val_error_batch(allocs, mesh=mesh)
+        assert shard == ref, "sharded evaluator diverged from v2"
+        t1, t2 = [], []
+        for _ in range(TRIALS):
+            t0 = time.perf_counter()
+            compact.val_error_batch(allocs)
+            t1.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            compact.val_error_batch(allocs, mesh=mesh)
+            t2.append(time.perf_counter() - t0)
+        rows.append({"pop": pop, "n_devices": len(jax.devices()),
+                     "v2_single_ms": med(t1) * 1e3,
+                     "sharded_ms": med(t2) * 1e3,
+                     "speedup_sharded_vs_v2": med(t1) / med(t2),
+                     "bit_identical": True})
+    print("RESULT " + json.dumps(rows))
+""")
+
+
+def search_sharded(quick: bool = False):
+    """``search_sharded`` row family: the mesh-partitioned population
+    evaluator vs the single-device v2 evaluator, on an 8-way host-device
+    mesh in a subprocess (XLA device-count flags must precede jax init).
+    Parity is asserted inside the subprocess (integer error counts,
+    exact ==). Naming follows the other rows: ``speedup_sharded_vs_v2`` =
+    t_v2_single / t_sharded, so values BELOW 1x mean the mesh path is
+    slower. On this CPU container the 8 "devices" share the same cores, so
+    sub-1x is expected — the row tracks that partitioning overhead and
+    keeps the mesh path exercised; on real accelerators the same path
+    scales candidates across chips."""
+    script = _SHARDED_SCRIPT % ((20, 2) if quick else (40, 5))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=root)
+    if out.returncode != 0:
+        raise RuntimeError("search_sharded subprocess failed:\n"
+                           + out.stderr[-2000:])
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    rows = json.loads(line[len("RESULT "):])
+    for r in rows:
+        emit(f"search_sharded_p{r['pop']}",
+             r["sharded_ms"] * 1e3 / r["pop"],
+             f"n_devices={r['n_devices']};"
+             f"speedup_sharded_vs_v2={r['speedup_sharded_vs_v2']:.2f}x;"
+             f"bit_identical={r['bit_identical']};host_mesh=cpu")
+    return rows
+
+
+def search_pipeline_v2(full: bool = False, quick: bool = False) -> bool:
     """Search-loop evaluation pipeline v2 throughput. Three generations of
     the hot path are measured on identical candidate sets (interleaved —
     this box's CPU allocation is noisy) at the paper-style compact ranking
@@ -215,10 +301,11 @@ def search_pipeline_v2(full: bool = False) -> bool:
         except Exception:
             prev = None
 
-    trained = X.train_small_sru(steps=60 if full else 40)
+    trained = X.train_small_sru(steps=60 if full else (20 if quick else 40))
     prob = X.build_problem(trained, BITFUSION, ("error", "speedup"))
     rng = np.random.default_rng(0)
     med = lambda xs: sorted(xs)[len(xs) // 2]
+    n_trials = 3 if quick else 5
 
     def subsets(b, t):
         raw, _ = synthetic.speech_eval_sets(trained.task, batch=max(b, 1),
@@ -228,7 +315,7 @@ def search_pipeline_v2(full: bool = False) -> bool:
             jnp.concatenate([x["labels"] for x in bs])[:b, :t])
         return [stack(s) for s in raw]
 
-    def measure_plain(tr, pop, trials=5):
+    def measure_plain(tr, pop, trials=n_trials):
         genomes = [rng.integers(1, 5, prob.n_var) for _ in range(pop)]
         allocs = [prob.decode(prob._snap(g)) for g in genomes]
         scalar_ref = [tr.val_error(a) for a in allocs]      # warm + reference
@@ -254,7 +341,7 @@ def search_pipeline_v2(full: bool = False) -> bool:
                 "speedup_v2_vs_pr1": med(t1) / med(t2),
                 "bit_identical": True}
 
-    def measure_beacon(tr, pop, trials=5, retrain_steps=3):
+    def measure_beacon(tr, pop, trials=n_trials, retrain_steps=3):
         """PR-1 pipeline (detached: scalar error_fn per candidate) vs the
         v2 beacon-grouped batched evaluator on one frozen beacon state."""
         bprob = X.build_problem(tr, BITFUSION, ("error", "speedup"))
@@ -324,10 +411,12 @@ def search_pipeline_v2(full: bool = False) -> bool:
         },
         "plain_compact": [measure_plain(compact, 16),
                           measure_plain(compact, 32)],
-        "plain_full": [measure_plain(trained, 16)],
         "beacon_compact": [measure_beacon(compact, 32)],
         "memo": memo,
     }
+    if not quick:                       # full-shape row skipped in CI lane
+        results["plain_full"] = [measure_plain(trained, 16)]
+    results["sharded"] = search_sharded(quick)
 
     c16, c32 = results["plain_compact"]
     b32 = results["beacon_compact"][0]
@@ -378,12 +467,13 @@ def search_pipeline_v2(full: bool = False) -> bool:
               f"detached pipeline")
         ok = False
 
-    # only a passing run may replace the stored reference — a regressing
-    # run must not overwrite the very baseline it was gated against
-    if ok:
+    # only a passing FULL run may replace the stored reference — a
+    # regressing run must not overwrite the very baseline it was gated
+    # against, and the trimmed --quick rows are not reference-grade
+    if ok and not quick:
         with open("BENCH_search_throughput.json", "w") as f:
             json.dump(results, f, indent=2)
-    else:
+    elif not ok:
         print("BENCH_search_throughput.json left untouched (regressing run "
               "does not reset the gate's reference)")
     return ok
@@ -455,6 +545,10 @@ def roofline_table():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI lane: skip the full-shape rows and the "
+                         "end-to-end figure searches, trim trials, and "
+                         "never rewrite BENCH_search_throughput.json")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
     table1_ops()
@@ -469,8 +563,9 @@ def main() -> None:
     nsga2_throughput()
     hlo_analyzer_bench()
     roofline_table()
-    ok = search_pipeline_v2(args.full)
-    fig7_10_search(args.full)
+    ok = search_pipeline_v2(args.full, quick=args.quick)
+    if not args.quick:
+        fig7_10_search(args.full)
     if not ok:
         print("search_pipeline_v2: v2 throughput regressed below the "
               "stored PR-1 numbers", file=sys.stderr)

@@ -30,6 +30,18 @@ grouping a population by nearest beacon and issuing one ``errors`` call per
 (beacon-params, candidate-group); correctness does not depend on which
 params are passed, only bit-parity per call does, so grouped evaluation is
 exactly the scalar sequence re-batched.
+
+Device-mesh sharding (``mesh=``): the population axis additionally
+partitions across a 1-D "pop" device mesh (``launch.mesh
+.make_population_mesh`` / ``distributed.pop_sharding``): the qp grid stack
+is sharded over P, parameters and the validation set (and the calibration
+state baked into the grids) are replicated per shard, and the per-candidate
+integer error counts are gathered back to the host. Populations pad up to a
+multiple of the shard count on top of the compile buckets; padding lanes
+duplicate the last candidate and are sliced off after the gather. Because
+lanes are independent, the sharded evaluator keeps the bit-identical error
+contract — beacon groups shard independently (each grouped ``errors`` call
+is itself a sharded population).
 """
 from __future__ import annotations
 
@@ -38,6 +50,9 @@ from typing import Callable, Dict, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.distributed import pop_sharding
+from repro.distributed import sharding as dist_sharding
 
 Alloc = Dict[str, Tuple[int, int]]
 
@@ -81,16 +96,25 @@ class BatchedSRUEvaluator:
     ``fused=True`` (default) runs the v2 explicit population-axis forward
     (direction-fused scans); ``fused=False`` keeps the PR-1 vmap lowering
     for benchmarking. Both are bit-identical to the scalar path.
+
+    ``mesh`` (optional): a mesh with a "pop" axis shards the population
+    across devices — ``partition="shard_map"`` (default, exact per-shard
+    program) or ``"gspmd"`` (jit with PartitionSpecs). Single-device
+    behaviour and error counts are unchanged.
     """
 
     def __init__(self, cfg, val_subsets, make_qp: Callable[[Alloc], dict],
-                 use_kernel: bool = False, fused: bool = True):
+                 use_kernel: bool = False, fused: bool = True,
+                 mesh=None, partition: str = "shard_map",
+                 pop_axis: str = pop_sharding.POP_AXIS):
         from repro.models import sru
 
         self.cfg = cfg
         self.layer_names = list(cfg.layer_names())
         self.val_subsets = val_subsets
         self.make_qp = make_qp
+        self.mesh = mesh
+        self._n_shards = pop_sharding.pop_axis_size(mesh, pop_axis)
         # equal-shaped subsets additionally fold into the batch axis, so the
         # whole validation sweep is ONE call instead of one per subset
         shapes = {tuple(np.asarray(f).shape) for f, _ in val_subsets}
@@ -105,7 +129,6 @@ class BatchedSRUEvaluator:
 
         n_sub = len(val_subsets)
 
-        @jax.jit
         def _batch_err(params, feats, labels, qp_stack):
             logits = sru.forward_population(params, cfg, feats, qp_stack,
                                             use_kernel=use_kernel,
@@ -116,30 +139,50 @@ class BatchedSRUEvaluator:
                 return jnp.sum(wrong.reshape(p, n_sub, -1, t), axis=(2, 3))
             return jnp.sum(wrong, axis=(1, 2))
 
-        self._batch_err = _batch_err
+        if mesh is None:
+            self._batch_err = jax.jit(_batch_err)
+        else:
+            sharded = pop_sharding.shard_population(
+                _batch_err, mesh, n_replicated=3, axis=pop_axis,
+                mode=partition)
+            if partition == "gspmd":
+                # activate the "pop" logical-axis rule so the constraints
+                # inside forward_population bind to this mesh at trace time
+                def call(params, feats, labels, qp_stack,
+                         _f=sharded, _m=mesh):
+                    with dist_sharding.axis_rules(_m):
+                        return _f(params, feats, labels, qp_stack)
+                self._batch_err = call
+            else:
+                self._batch_err = sharded
 
     def _stack(self, allocs: Sequence[Alloc]) -> np.ndarray:
         qps = [self.make_qp(a) for a in allocs]
         stack = stack_qps(qps, self.layer_names)
-        pad = bucket_size(len(allocs)) - len(allocs)
+        target = pop_sharding.padded_pop(bucket_size(len(allocs)),
+                                         self._n_shards)
+        pad = target - len(allocs)
         if pad:
             stack = np.concatenate([stack, np.repeat(stack[-1:], pad, 0)])
         return stack
 
     def errors(self, allocs: Sequence[Alloc], params) -> List[float]:
-        """Max-over-subsets error % for each allocation (order-preserving)."""
+        """Max-over-subsets error % for each allocation (order-preserving).
+        Error counts come back as a host array (gathered across the mesh
+        when sharded); padding lanes are sliced off before the max."""
         if not allocs:
             return []
         stack = self._stack(allocs)
         p = len(allocs)
         if self._folded:
-            wrong = np.asarray(self._batch_err(
-                params, self._feats_all, self._labels_all, stack))  # (P, S)
+            wrong = np.asarray(pop_sharding.gather_counts(self._batch_err(
+                params, self._feats_all, self._labels_all, stack)))  # (P, S)
             errs = 100.0 * wrong[:p].astype(np.int64) / self._subset_frames
             return np.max(errs, axis=1).tolist()
         per_subset = []
         for feats, labels in self.val_subsets:
-            wrong = np.asarray(self._batch_err(params, feats, labels, stack))
+            wrong = np.asarray(pop_sharding.gather_counts(
+                self._batch_err(params, feats, labels, stack)))
             per_subset.append(100.0 * wrong[:p].astype(np.int64)
                               / int(np.asarray(labels).size))
         return np.max(np.stack(per_subset), axis=0).tolist()

@@ -106,6 +106,15 @@ class NSGA2:
     must match ``evaluate`` exactly: the GA's RNG stream never depends on
     evaluation, so scalar and batched runs visit identical genomes and the
     Pareto front is reproduced bit-for-bit.
+
+    Determinism: all stochastic sites thread through ONE master
+    ``SeedSequence(seed)`` — the initial population and each generation's
+    variation draw from their own spawned child streams. A generation's
+    genomes therefore depend only on (seed, generation, surviving
+    population), never on how many draws other code consumed: an evaluator
+    that reorders its internal work (dedup hits, sharded gathers, grouped
+    beacon calls) cannot shift the variation stream, so two same-seed runs
+    always visit identical genomes.
     """
     n_var: int
     var_lo: int
@@ -176,7 +185,11 @@ class NSGA2:
         return out[:self.pop_size]
 
     def run(self) -> List[Individual]:
-        rng = np.random.default_rng(self.seed)
+        # one master key, one spawned child stream per stochastic site:
+        # keys[0] seeds the initial population, keys[1 + gen] seeds
+        # generation ``gen``'s variation (tournament/crossover/mutation)
+        keys = np.random.SeedSequence(self.seed).spawn(self.n_generations + 1)
+        rng = np.random.default_rng(keys[0])
         cache: dict = {}
         pop = self._eval_many(
             [rng.integers(self.var_lo, self.var_hi + 1, self.n_var)
@@ -184,7 +197,9 @@ class NSGA2:
         for gen in range(self.n_generations):
             for front in fast_non_dominated_sort(pop):
                 assign_crowding(front)
-            children = self._eval_many(self._offspring(rng, pop), cache)
+            children = self._eval_many(
+                self._offspring(np.random.default_rng(keys[1 + gen]), pop),
+                cache)
             merged = pop + children
             survivors: List[Individual] = []
             for front in fast_non_dominated_sort(merged):

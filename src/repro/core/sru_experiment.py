@@ -73,25 +73,35 @@ class TrainedSRU:
         return sru.quant_triples_for(alloc, self.wclips, self.act_ranges,
                                      self.wranges)
 
-    def batched_evaluator(self,
-                          fused: bool = True
+    def batched_evaluator(self, fused: bool = True, mesh=None,
+                          partition: str = "shard_map"
                           ) -> batched_eval.BatchedSRUEvaluator:
         """Lazily-built population evaluator (one jitted call scores a
         whole GA generation; compiled per population-size bucket).
         ``fused=True`` is the v2 population-axis forward; ``fused=False``
-        keeps the PR-1 vmap lowering for comparison."""
-        if fused not in self._batched_eval:
-            self._batched_eval[fused] = batched_eval.BatchedSRUEvaluator(
-                self.cfg, self.val_subsets, self.qp_for, fused=fused)
-        return self._batched_eval[fused]
+        keeps the PR-1 vmap lowering for comparison. ``mesh`` shards the
+        population axis across its "pop" device axis (``partition`` picks
+        the shard_map or GSPMD lowering, see distributed.pop_sharding)."""
+        # Mesh hashes by devices + axis names, so equivalent meshes built
+        # fresh per call share one compiled evaluator
+        key = (fused, mesh, partition if mesh is not None else "")
+        if key not in self._batched_eval:
+            self._batched_eval[key] = batched_eval.BatchedSRUEvaluator(
+                self.cfg, self.val_subsets, self.qp_for, fused=fused,
+                mesh=mesh, partition=partition)
+        return self._batched_eval[key]
 
-    def val_error_batch(self, allocs, params=None, *, fused: bool = True):
+    def val_error_batch(self, allocs, params=None, *, fused: bool = True,
+                        mesh=None, partition: str = "shard_map"):
         """Batched counterpart of ``val_error``: max error over the 4
         validation subsets for EVERY allocation in one call. Matches the
         scalar path exactly (integer error counts). ``params`` selects the
-        full-precision parameter set (base or a retrained beacon's)."""
+        full-precision parameter set (base or a retrained beacon's);
+        ``mesh`` partitions the candidates across devices."""
         params = self.params if params is None else params
-        return self.batched_evaluator(fused=fused).errors(allocs, params)
+        return self.batched_evaluator(fused=fused, mesh=mesh,
+                                      partition=partition
+                                      ).errors(allocs, params)
 
     def val_error(self, alloc: Optional[Alloc] = None,
                   params=None) -> float:
@@ -173,7 +183,11 @@ def train_small_sru(steps: int = 400, *, cfg: SRUModelConfig = SEARCH_CFG,
 def build_problem(trained: TrainedSRU, hardware: HardwareModel,
                   objectives, *, use_search_cfg_sizes: bool = True,
                   sram_override: Optional[int] = None,
-                  batched: bool = True) -> MOHAQProblem:
+                  batched: bool = True, mesh=None,
+                  partition: str = "shard_map") -> MOHAQProblem:
+    """``mesh`` (a 1-D "pop" device mesh) shards every population-level
+    error evaluation across devices; scalar fallbacks and the bit-identical
+    Pareto-front contract are unchanged."""
     cfg = trained.cfg
     macs = cfg.layer_weight_counts()
     hw = hardware
@@ -184,7 +198,8 @@ def build_problem(trained: TrainedSRU, hardware: HardwareModel,
         return trained.val_error(alloc)
 
     def batch_error_fn(allocs):
-        return trained.val_error_batch(allocs)
+        return trained.val_error_batch(allocs, mesh=mesh,
+                                       partition=partition)
 
     fixed = 14 * cfg.hidden * 2 * cfg.n_sru_layers * 2  # elementwise ops
     return MOHAQProblem(
@@ -203,24 +218,27 @@ def build_problem(trained: TrainedSRU, hardware: HardwareModel,
 
 def experiment1_memory(trained: TrainedSRU, *, generations=15, pop=10,
                        initial=24, seed=0, log=None,
-                       batched: bool = True) -> MOHAQResult:
+                       batched: bool = True, mesh=None,
+                       partition: str = "shard_map") -> MOHAQResult:
     """Paper §5.2: minimize (WER, memory); no hardware platform."""
     mem_only = dataclasses.replace(BITFUSION, sram_bytes=None,
                                    name="none(mem-only)")
     prob = build_problem(trained, mem_only, ("error", "memory"),
-                         batched=batched)
+                         batched=batched, mesh=mesh, partition=partition)
     return run_search(prob, n_generations=generations, pop_size=pop,
                       initial_pop_size=initial, seed=seed, log=log)
 
 
 def experiment2_silago(trained: TrainedSRU, *, generations=15, pop=10,
                        initial=24, seed=0, log=None,
-                       batched: bool = True) -> MOHAQResult:
+                       batched: bool = True, mesh=None,
+                       partition: str = "shard_map") -> MOHAQResult:
     """Paper §5.3: SiLago, 3 objectives (WER, speedup, energy), 6MB-equiv
     SRAM constraint (scaled to the search model: 3.5x compression bound)."""
     sram = int(trained.cfg.total_weights() * 32 / 8 / 3.5)
     prob = build_problem(trained, SILAGO, ("error", "speedup", "energy"),
-                         sram_override=sram, batched=batched)
+                         sram_override=sram, batched=batched, mesh=mesh,
+                         partition=partition)
     return run_search(prob, n_generations=generations, pop_size=pop,
                       initial_pop_size=initial, seed=seed, log=log)
 
@@ -228,7 +246,8 @@ def experiment2_silago(trained: TrainedSRU, *, generations=15, pop=10,
 def experiment3_bitfusion(trained: TrainedSRU, *, generations=15, pop=10,
                           initial=24, seed=0, beacon: bool = False,
                           retrain_steps: int = 60, log=None,
-                          batched: bool = True):
+                          batched: bool = True, mesh=None,
+                          partition: str = "shard_map"):
     """Paper §5.4: Bitfusion, (WER, speedup), small-SRAM constraint,
     inference-only then beacon-based. The paper's 10.6x bound is scaled to
     this model's weight mix: the 16-bit vectors are 2.2% of the search model
@@ -238,7 +257,8 @@ def experiment3_bitfusion(trained: TrainedSRU, *, generations=15, pop=10,
     vec = trained.cfg.vector_weight_count()
     sram = int((mat * 3.5 + vec * 16) / 8)
     prob = build_problem(trained, BITFUSION, ("error", "speedup"),
-                         sram_override=sram, batched=batched)
+                         sram_override=sram, batched=batched, mesh=mesh,
+                         partition=partition)
     bs = None
     if beacon:
         data = synthetic.speech_batches(trained.task, 8, 48, seed=3)
@@ -255,7 +275,10 @@ def experiment3_bitfusion(trained: TrainedSRU, *, generations=15, pop=10,
             return trained.val_error(alloc, params=params)
 
         def batch_error_with_params(params, allocs):
-            return trained.val_error_batch(allocs, params=params)
+            # beacon groups shard independently: every grouped call is
+            # itself a population partitioned over the mesh
+            return trained.val_error_batch(allocs, params=params, mesh=mesh,
+                                           partition=partition)
 
         bs = BeaconSearch(problem=prob, base_params=trained.params,
                           retrain_fn=retrain_fn,

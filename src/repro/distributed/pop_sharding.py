@@ -1,0 +1,93 @@
+"""Population-axis sharding for MOHAQ candidate evaluation.
+
+The GA search scores whole populations per generation through
+``models.sru.forward_population`` — a (P, ...) batch whose lanes are
+completely independent (one quantization candidate per lane, no cross-lane
+reduction anywhere in the forward or the error count). That independence
+makes the population axis trivially data-parallel: partition P across a
+1-D device mesh, replicate everything else (parameters, validation
+features/labels, and the calibration-derived quantization grids baked into
+``qp_stack`` rows), and gather the per-candidate integer error counts back
+to the host.
+
+Two partitioned lowerings are provided:
+
+- ``shard_map`` (default): each device runs the *exact* single-device
+  program on its local (P/n, ...) slice — per-lane arithmetic is identical
+  by construction, so the bit-identical-Pareto-front contract of the
+  batched evaluator (PRs 1-2) extends to the mesh without any tolerance.
+- ``gspmd``: plain ``jit`` with ``in_shardings``/``out_shardings``
+  PartitionSpecs; the partitioner propagates the population axis from the
+  sharded ``qp_stack`` input (helped by the ``pop`` logical-axis
+  constraints inside ``forward_population``). Kept as the path real-TPU
+  deployments would use (XLA can overlap gather/compute); parity is
+  asserted by tests, not by construction.
+
+Uneven populations: candidate counts are padded up to a multiple of the
+mesh's population-axis size (duplicating the last row — padding lanes are
+sliced off after the gather, so their values never matter), on top of the
+compile-size bucketing ``core.batched_eval`` already does.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+POP_AXIS = "pop"
+
+PARTITION_MODES = ("shard_map", "gspmd")
+
+
+def pop_axis_size(mesh: Optional[Mesh], axis: str = POP_AXIS) -> int:
+    """Number of population shards a mesh provides (1 without a mesh)."""
+    if mesh is None:
+        return 1
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
+    return int(mesh.shape[axis])
+
+
+def padded_pop(bucket: int, n_shards: int) -> int:
+    """Population padding target: the compile bucket rounded up to a
+    multiple of the mesh's population-axis size (every shard gets the same
+    lane count — jit sharding requires even partitions)."""
+    return -(-bucket // n_shards) * n_shards
+
+
+def shard_population(fn: Callable, mesh: Mesh, *, n_replicated: int,
+                     axis: str = POP_AXIS, mode: str = "shard_map"):
+    """Partition ``fn(*replicated_args, batched_arg)`` over the population
+    axis of its LAST argument and return a jitted callable with the same
+    global-shape signature.
+
+    ``fn`` must be lane-independent in its last argument's leading axis
+    (true of the population evaluator: one candidate per lane) and is
+    called with ``n_replicated`` leading replicated arguments.
+    ``mode="shard_map"`` runs the exact per-shard program;
+    ``mode="gspmd"`` lets the SPMD partitioner lower the global program
+    from in/out PartitionSpecs.
+    """
+    if mode not in PARTITION_MODES:
+        raise ValueError(f"mode must be one of {PARTITION_MODES}: {mode!r}")
+    pop_axis_size(mesh, axis)          # validates the axis exists
+    rep_specs = (P(),) * n_replicated
+    if mode == "shard_map":
+        inner = shard_map(fn, mesh=mesh, in_specs=rep_specs + (P(axis),),
+                          out_specs=P(axis), check_rep=False)
+        return jax.jit(inner)
+    rep = NamedSharding(mesh, P())
+    return jax.jit(fn, in_shardings=(rep,) * n_replicated
+                   + (NamedSharding(mesh, P(axis)),),
+                   out_shardings=rep)
+
+
+def gather_counts(counts) -> "jax.Array":
+    """Gather per-candidate error counts to a fully-addressable host value.
+
+    With ``shard_map``/``gspmd`` outputs the result is already a global
+    array; this just blocks and devices-get so callers can slice the
+    padding lanes off in numpy."""
+    return jax.device_get(counts)

@@ -49,6 +49,7 @@ DEFAULT_RULES: Dict[str, MeshAxes] = {
     "cache_hd": None,
     "sru_hidden": "model",
     "stack": None,            # stacked-layer leading axis
+    "pop": "pop",             # GA population lane (candidate-parallel eval)
 }
 
 

@@ -25,3 +25,14 @@ def make_mesh_for(n_devices: Optional[int] = None, model_parallel: int = 1,
     n = n_devices or len(jax.devices())
     assert n % model_parallel == 0, (n, model_parallel)
     return jax.make_mesh((n // model_parallel, model_parallel), axes)
+
+
+def make_population_mesh(n_devices: Optional[int] = None, axis: str = "pop"):
+    """1-D mesh over the GA *population* axis: every alive device becomes
+    one population shard for the sharded candidate evaluator
+    (``distributed.pop_sharding``). The search workload is embarrassingly
+    parallel over candidates, so a flat axis is the whole topology — use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise it
+    on a CPU host."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))

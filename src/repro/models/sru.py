@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quantization as Q
+from repro.distributed.sharding import shard as dist_shard
 
 LAYER_NAMES = ("L0", "Pr1", "L1", "Pr2", "L2", "Pr3", "L3", "FC")
 
@@ -341,6 +342,10 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
         return out.reshape(xq.shape[:3] + (wq.shape[-1],))
 
     x = jnp.broadcast_to(feats, (P,) + feats.shape)          # (P,B,T,m)
+    # anchor the population lane on the mesh's "pop" axis (no-op outside an
+    # axis_rules context) so the GSPMD lowering of the sharded evaluator
+    # partitions candidates instead of replicating them
+    x = dist_shard(x, "pop")
     for i in range(cfg.n_sru_layers):
         name = f"L{i}"
         lp = params[name]
@@ -398,7 +403,8 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
             pname = f"Pr{i + 1}"
             x = mxv(q_act(pname, x), q_w(pname, params[pname]["W"]))
     xq = q_act("FC", x)
-    return mxv(xq, q_w("FC", params["FC"]["W"])) + params["FC"]["b"]
+    logits = mxv(xq, q_w("FC", params["FC"]["W"])) + params["FC"]["b"]
+    return dist_shard(logits, "pop")
 
 
 def calibrate(params, cfg: SRUModelConfig, feats_batches) -> Dict[str, float]:

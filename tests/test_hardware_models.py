@@ -1,0 +1,152 @@
+"""Hardware-model invariants: the objective surfaces the GA searches over
+must be monotone in per-layer precision, and the paper's 8-bit-uniform
+anchors must come straight out of ``HardwareModel`` (not only via
+MOHAQProblem's packing).
+
+Monotone direction (physics of every platform modeled here): raising any
+single layer's bit-width can only LOWER the speedup objective (more cycles
+or more HBM bytes per MAC) and can only RAISE energy (more switched bits
+per MAC, more bits loaded) — if a platform model violated this, NSGA-II
+would happily "discover" free-lunch fronts that the hardware cannot
+deliver.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.core.hardware import BITFUSION, SILAGO, TPU_V5E, HardwareModel
+from repro.core.mohaq import MOHAQProblem
+from repro.models.sru import LAYER_NAMES
+
+FIXED_OPS = 88000 + 10704   # paper Table 4 element-wise + nonlinear ops
+
+
+@pytest.fixture(scope="module")
+def paper_cfg():
+    return get_config("sru_timit")
+
+
+@pytest.fixture(scope="module")
+def macs(paper_cfg):
+    return paper_cfg.layer_weight_counts()
+
+
+@pytest.fixture(scope="module")
+def vec(paper_cfg):
+    return paper_cfg.vector_weight_count()
+
+
+def uniform(bits):
+    return {n: (bits, bits) for n in LAYER_NAMES}
+
+
+def _menu(hw: HardwareModel):
+    return sorted(hw.supported_bits)
+
+
+PLATFORMS = [SILAGO, BITFUSION, TPU_V5E]
+IDS = [p.name for p in PLATFORMS]
+
+
+class TestMonotonicity:
+    @pytest.mark.parametrize("hw", PLATFORMS, ids=IDS)
+    def test_speedup_non_increasing_per_layer(self, hw, macs):
+        """Raising any ONE layer's (w, a) precision never increases the
+        Eq. 4 speedup."""
+        menu = _menu(hw)
+        for layer in LAYER_NAMES:
+            for base_bits in menu:
+                base = uniform(base_bits)
+                s0 = hw.speedup(macs, base, FIXED_OPS)
+                for higher in (b for b in menu if b > base_bits):
+                    bumped = dict(base)
+                    bumped[layer] = (higher, higher)
+                    s1 = hw.speedup(macs, bumped, FIXED_OPS)
+                    assert s1 <= s0 + 1e-12, (hw.name, layer, base_bits,
+                                              higher)
+
+    @pytest.mark.parametrize("hw", PLATFORMS, ids=IDS)
+    def test_energy_non_decreasing_per_layer(self, hw, macs, vec):
+        """Raising any ONE layer's precision never lowers the Eq. 3
+        energy (more bits loaded + costlier MACs)."""
+        menu = _menu(hw)
+        for layer in LAYER_NAMES:
+            for base_bits in menu:
+                base = uniform(base_bits)
+                e0 = hw.energy_joules(macs, macs, base, vec)
+                for higher in (b for b in menu if b > base_bits):
+                    bumped = dict(base)
+                    bumped[layer] = (higher, higher)
+                    e1 = hw.energy_joules(macs, macs, bumped, vec)
+                    assert e1 >= e0 - 1e-18, (hw.name, layer, base_bits,
+                                              higher)
+
+    @pytest.mark.parametrize("hw", [BITFUSION, TPU_V5E],
+                             ids=["bitfusion", "tpu_v5e"])
+    def test_weight_only_bump_monotone(self, hw, macs, vec):
+        """On platforms with untied W/A genes, bumping only the WEIGHT
+        precision of one layer is also monotone (activation fixed)."""
+        for layer in LAYER_NAMES:
+            alloc = uniform(4)
+            s0 = hw.speedup(macs, alloc, FIXED_OPS)
+            e0 = hw.energy_joules(macs, macs, alloc, vec)
+            bumped = dict(alloc)
+            bumped[layer] = (8, 4)
+            assert hw.speedup(macs, bumped, FIXED_OPS) <= s0 + 1e-12
+            assert hw.energy_joules(macs, macs, bumped, vec) >= e0 - 1e-18
+
+    @pytest.mark.parametrize("hw", PLATFORMS, ids=IDS)
+    def test_memory_strictly_increasing(self, hw, macs, vec):
+        """Model bytes strictly grow with uniform weight precision."""
+        sizes = [hw.model_fits(macs, uniform(b), vec)[1]
+                 for b in _menu(hw)]
+        assert all(a < b for a, b in zip(sizes, sizes[1:]))
+
+
+class TestEightBitUniformAnchors:
+    """The 8-bit-uniform anchor points used throughout test_paper_numbers
+    re-derived DIRECTLY from HardwareModel equations — a change to
+    MOHAQProblem's objective packing can no longer mask a hardware-model
+    regression."""
+
+    def test_silago_anchor(self, macs, vec):
+        total = sum(macs.values())
+        # Eq. 4 by hand: every MAC at 2x, fixed ops at 1x
+        expected_speedup = (2.0 * total + FIXED_OPS) / (total + FIXED_OPS)
+        assert SILAGO.speedup(macs, uniform(8), FIXED_OPS) == \
+            pytest.approx(expected_speedup, rel=1e-12)
+        # Eq. 3 by hand: load every weight bit + 8-bit MAC energy
+        bits = total * 8 + vec * 16
+        expected_e = (bits * SILAGO.load_pj_per_bit
+                      + total * SILAGO.mac_pj[8]) * 1e-12
+        assert SILAGO.energy_joules(macs, macs, uniform(8), vec) == \
+            pytest.approx(expected_e, rel=1e-12)
+
+    def test_bitfusion_anchor(self, macs):
+        total = sum(macs.values())
+        # 256/(8*8) = 4x per MAC, diluted by the 16-bit fixed ops
+        expected = (4.0 * total + FIXED_OPS) / (total + FIXED_OPS)
+        assert BITFUSION.speedup(macs, uniform(8), FIXED_OPS) == \
+            pytest.approx(expected, rel=1e-12)
+        assert BITFUSION.speedup_of_pair(8, 8) == 4.0
+
+    def test_tpu_v5e_anchor(self, macs):
+        # memory-bound serving: int8 streams 2x fewer weight bits than bf16
+        assert TPU_V5E.speedup_of_pair(8, 8) == 2.0
+        total = sum(macs.values())
+        expected = (2.0 * total + FIXED_OPS) / (total + FIXED_OPS)
+        assert TPU_V5E.speedup(macs, uniform(8), FIXED_OPS) == \
+            pytest.approx(expected, rel=1e-12)
+
+    @pytest.mark.parametrize("hw", PLATFORMS, ids=IDS)
+    def test_problem_objectives_equal_direct_model(self, hw, macs, vec):
+        """MOHAQProblem.hardware_objectives is pure plumbing over
+        HardwareModel for the 8-bit anchor (and a mixed allocation)."""
+        prob = MOHAQProblem(list(LAYER_NAMES), macs, macs, vec, hw,
+                            lambda a: 0.0, 16.2, fixed_ops=FIXED_OPS)
+        mixed = uniform(8)
+        mixed["L1"] = (4, 4)
+        mixed["FC"] = (16, 16)
+        for alloc in (uniform(8), mixed):
+            got = prob.hardware_objectives(alloc)
+            assert got["speedup"] == hw.speedup(macs, alloc, FIXED_OPS)
+            assert got["energy"] == hw.energy_joules(macs, macs, alloc, vec)

@@ -98,6 +98,131 @@ class TestTriples:
         assert jnp.allclose(g, 1.0)
 
 
+class TestIntQuantProperties:
+    """Property-based invariants of the integer fake-quant primitive."""
+
+    @given(arrays, st.sampled_from([2, 4, 8]),
+           st.floats(0.05, 50.0))
+    @settings(max_examples=40, deadline=None)
+    def test_output_bounded_by_clip_range(self, x, bits, clip):
+        """Output never exceeds the clip on the positive side and never
+        exceeds the (asymmetric-grid) lo*scale bound on the negative side:
+        q in [lo*clip/hi, clip]."""
+        lo, hi = Q.INT_RANGES[bits]
+        q = np.asarray(Q.quantize_int(jnp.asarray(x), bits, clip))
+        scale = clip / hi
+        eps = 1e-5 * clip
+        assert q.max(initial=0.0) <= clip + eps
+        assert q.min(initial=0.0) >= lo * scale - eps
+        assert np.all(np.abs(q) <= clip * abs(lo) / hi + eps)
+
+    @given(arrays, st.sampled_from([2, 4, 8]),
+           st.floats(0.05, 50.0))
+    @settings(max_examples=40, deadline=None)
+    def test_output_on_power_of_two_grid(self, x, bits, clip):
+        """Every output value is an integer multiple of the scale, and at
+        most 2^bits distinct code points are used."""
+        lo, hi = Q.INT_RANGES[bits]
+        q = np.asarray(Q.quantize_int(jnp.asarray(x), bits, clip))
+        codes = q / (clip / hi)
+        assert np.allclose(codes, np.round(codes), atol=1e-4)
+        assert len(np.unique(np.round(codes))) <= 2 ** bits
+        assert np.round(codes).min(initial=0) >= lo
+        assert np.round(codes).max(initial=0) <= hi
+
+
+class TestMMSEProperties:
+    @given(arrays, st.sampled_from([2, 4, 8]))
+    @settings(max_examples=20, deadline=None)
+    def test_never_beats_exhaustive_grid(self, x, bits):
+        """mmse_clip grid-searches 64 clip fractions; its pick must achieve
+        the minimum error over that same exhaustive grid (i.e. the search
+        really is exhaustive — no candidate beats the returned clip)."""
+        if np.abs(x).max() == 0:
+            return
+        c = Q.mmse_clip(x, bits)
+
+        def mse(clip):
+            q = np.asarray(Q.quantize_int(jnp.asarray(x), bits, clip))
+            return float(np.mean((x - q) ** 2))
+
+        absmax = float(np.abs(x).max())
+        grid = [absmax * f for f in np.linspace(1.0 / 64, 1.0, 64)]
+        best = min(mse(g) for g in grid)
+        assert mse(c) <= best + 1e-9
+
+
+class TestTreeRoundTrip:
+    def _tree(self, odd_last=False):
+        rng = np.random.default_rng(0)
+        last = 9 if odd_last else 10
+        return {
+            "layer": {"W": jnp.asarray(rng.normal(0, 1, (6, last)),
+                                       jnp.float32),
+                      "b": jnp.asarray(rng.normal(0, 1, (last,)),
+                                       jnp.float32)},
+            "head": {"W": jnp.asarray(rng.normal(0, 2, (4, 8)),
+                                      jnp.bfloat16)},
+        }
+
+    @pytest.mark.parametrize("bits", [8, 4])
+    @pytest.mark.parametrize("odd_last", [False, True])
+    def test_round_trip_shape_dtype(self, bits, odd_last):
+        """dequantize_tree(quantize_tree(t)) restores every leaf's shape
+        and dtype exactly — including int4's odd-last-dim padding — and
+        leaves sub-2D leaves untouched."""
+        tree = self._tree(odd_last)
+        spec = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+        qt = Q.quantize_tree(tree, bits)
+        # 1-D bias passes through unquantized
+        assert qt["layer"]["b"] is tree["layer"]["b"]
+        back = Q.dequantize_tree(qt, spec, bits)
+        for path in (("layer", "W"), ("layer", "b"), ("head", "W")):
+            orig = tree[path[0]][path[1]]
+            got = back[path[0]][path[1]]
+            assert got.shape == orig.shape
+            assert got.dtype == orig.dtype
+
+    @given(st.sampled_from([8, 4]), st.integers(2, 16))
+    @settings(max_examples=20, deadline=None)
+    def test_round_trip_value_error_bounded(self, bits, last_dim):
+        """Round-trip error stays within one quantization step of the
+        per-tensor scale for any last-dim parity."""
+        rng = np.random.default_rng(last_dim)
+        w = jnp.asarray(rng.normal(0, 1, (5, last_dim)), jnp.float32)
+        spec = {"w": jax.ShapeDtypeStruct(w.shape, w.dtype)}
+        back = Q.dequantize_tree(Q.quantize_tree({"w": w}, bits), spec, bits)
+        hi = 127 if bits == 8 else 7
+        scale = float(np.abs(np.asarray(w)).max()) / hi
+        assert float(jnp.max(jnp.abs(back["w"] - w))) <= scale * 0.5 + 1e-6
+
+
+class TestCompressionMonotonicity:
+    @given(st.lists(st.integers(10, 5000), min_size=1, max_size=6),
+           st.integers(0, 500))
+    @settings(max_examples=30, deadline=None)
+    def test_ratio_strictly_decreases_in_bits(self, sizes, vec):
+        """compression_ratio is strictly monotone decreasing as any
+        uniform bit-width rises (fewer bits == more compression)."""
+        lw = {f"l{i}": n for i, n in enumerate(sizes)}
+        ratios = [Q.compression_ratio(lw, {k: b for k in lw}, vec)
+                  for b in (2, 4, 8, 16)]
+        assert all(a > b for a, b in zip(ratios, ratios[1:]))
+
+    @given(st.sampled_from([2, 4, 8, 16]))
+    @settings(max_examples=8, deadline=None)
+    def test_per_layer_monotone(self, bits):
+        """Raising ONE layer's bits (others fixed) never raises the
+        ratio."""
+        lw = {"a": 1000, "b": 2000, "c": 500}
+        base = {"a": bits, "b": 4, "c": 8}
+        r0 = Q.compression_ratio(lw, base)
+        for higher in (b for b in (2, 4, 8, 16) if b > bits):
+            r1 = Q.compression_ratio(lw, {**base, "a": higher})
+            assert r1 < r0
+
+
 class TestCompression:
     def test_compressed_bits(self):
         lw = {"a": 100, "b": 300}

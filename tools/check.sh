@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Repo check pipeline (the order mirrors how a CI provider would stage it):
+#
+#   1. fast lane   — unit/parity tests, slow-marked suites skipped
+#   2. slow lane   — end-to-end suites under an 8-way host-device mesh
+#                    (the mesh-parity tests spawn their own subprocess with
+#                    the XLA flag; exporting it here also runs the
+#                    in-process suites against 8 virtual devices)
+#   3. benchmarks  — the --quick benchmark lane: paper tables, kernels,
+#                    search-throughput regression gate, sharded rows
+#
+# Usage: tools/check.sh [fast|slow|bench]   (no argument = all three)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+stage="${1:-all}"
+
+run_fast() {
+  echo "== fast lane: pytest -m 'not slow' =="
+  python -m pytest -x -q -m "not slow"
+}
+
+run_slow() {
+  echo "== slow lane: pytest -m slow (8-device host mesh) =="
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q -m slow
+}
+
+run_bench() {
+  echo "== benchmarks: python -m benchmarks.run --quick =="
+  python -m benchmarks.run --quick
+}
+
+case "$stage" in
+  fast)  run_fast ;;
+  slow)  run_slow ;;
+  bench) run_bench ;;
+  all)   run_fast; run_slow; run_bench ;;
+  *)     echo "unknown stage: $stage (want fast|slow|bench)" >&2; exit 2 ;;
+esac
+echo "== check.sh: all requested stages passed =="
