@@ -22,6 +22,26 @@ direction-fused recurrence scan per Bi-SRU layer, and (with
 ``use_kernel=True``) a Pallas kernel whose grid is (P, B/bb, n/bn) so the
 population axis feeds the compute grid directly.
 
+Quantized-weight banks (``make_banks``/``use_banks``): the per-layer menu
+is tiny ({2,4,8,16} bits) and the quantization grids freeze after
+calibration, so at most four distinct fake-quantized copies of any weight
+tensor exist across a whole search. The evaluator builds the stacked banks
+ONCE per full-precision parameter set (base model, and each retrained
+beacon's params on first use — cached by parameter identity) and the
+population forward gathers rows by menu index instead of requantizing
+per lane per call. Bank rows are bitwise identical to on-the-fly
+quantization, so every parity contract below is unchanged.
+
+One-dispatch-per-generation contract: with equal-shaped validation subsets
+(the standard case — they fold into the batch axis) a generation's whole
+evaluation — bank gather, fused Bi-SRU scan, frame-error reduction down to
+per-(candidate, subset) integer error counts — is ONE jitted call, keyed by
+the existing population compile buckets. Only the O(P) count→percentage
+division and subset max stay on the host (kept in float64 numpy so error
+values match the scalar path exactly). The per-call (P, L, 6) grid stack is
+donated to the dispatch on accelerator backends (donation is a no-op on
+CPU, where XLA does not support buffer aliasing).
+
 Beacon-grouping contract (core/beacon.py): the evaluator itself is
 parameter-agnostic — ``errors(allocs, params)`` scores any candidate group
 under any full-precision parameter set (base or retrained) with identical
@@ -45,7 +65,7 @@ is itself a sharded population).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -97,16 +117,29 @@ class BatchedSRUEvaluator:
     (direction-fused scans); ``fused=False`` keeps the PR-1 vmap lowering
     for benchmarking. Both are bit-identical to the scalar path.
 
+    ``make_banks`` (optional): params -> quantized-weight banks
+    (``sru.build_weight_banks`` bound to the trained model's frozen clips
+    and ranges). With ``use_banks=True`` (the default whenever
+    ``make_banks`` is wired and the lowering supports it) the dispatch
+    gathers each lane's weights from the banks instead of requantizing —
+    banks are built once per distinct parameter set and cached, so beacon
+    retrained parameters each get their own bank on first evaluation.
+
     ``mesh`` (optional): a mesh with a "pop" axis shards the population
     across devices — ``partition="shard_map"`` (default, exact per-shard
-    program) or ``"gspmd"`` (jit with PartitionSpecs). Single-device
-    behaviour and error counts are unchanged.
+    program) or ``"gspmd"`` (jit with PartitionSpecs). Banks replicate per
+    shard (like params) and the row gather runs inside each shard's
+    program, so single-device behaviour and error counts are unchanged.
     """
 
     def __init__(self, cfg, val_subsets, make_qp: Callable[[Alloc], dict],
                  use_kernel: bool = False, fused: bool = True,
                  mesh=None, partition: str = "shard_map",
-                 pop_axis: str = pop_sharding.POP_AXIS):
+                 pop_axis: str = pop_sharding.POP_AXIS,
+                 make_banks: Optional[Callable] = None,
+                 use_banks: Optional[bool] = None,
+                 qp_tables=None):
+        from repro.core import quantization as Q
         from repro.models import sru
 
         self.cfg = cfg
@@ -114,6 +147,23 @@ class BatchedSRUEvaluator:
         self.val_subsets = val_subsets
         self.make_qp = make_qp
         self.mesh = mesh
+        # (L, |menu|, 3) weight/activation quant_triple tables: the banked
+        # pipeline assembles qp stacks by numpy indexing (menu indexing)
+        # instead of P x L Python quant_triple calls; rows are bitwise
+        # identical, so this is a pure dispatch-overhead cut
+        self._qp_tables = qp_tables
+        self._menu_code = {b: k for k, b in enumerate(Q.SUPPORTED_BITS)}
+        if use_banks is None:       # banks need the explicit-population axis
+            use_banks = make_banks is not None and (fused or use_kernel)
+        if use_banks and make_banks is None:
+            raise ValueError("use_banks=True requires make_banks")
+        if use_banks and not (fused or use_kernel):
+            raise ValueError("banks require the fused or kernel lowering")
+        self.use_banks = use_banks
+        self._make_banks = make_banks
+        # banks keyed by parameter-set identity; the params ref is kept so
+        # a collected object's id can never alias a live cache entry
+        self._banks: Dict[int, tuple] = {}
         self._n_shards = pop_sharding.pop_axis_size(mesh, pop_axis)
         # equal-shaped subsets additionally fold into the batch axis, so the
         # whole validation sweep is ONE call instead of one per subset
@@ -129,36 +179,75 @@ class BatchedSRUEvaluator:
 
         n_sub = len(val_subsets)
 
-        def _batch_err(params, feats, labels, qp_stack):
+        # the per-generation dispatch: bank gather (or requant) -> fused
+        # Bi-SRU scan -> frame-error reduction to integer counts, one jitted
+        # call per (bucket, subset-shape). The qp grid stack is the only
+        # buffer consumed per call, so it is donated where the backend
+        # supports aliasing (not CPU).
+        def _batch_err(params, banks, feats, labels, qp_stack):
             logits = sru.forward_population(params, cfg, feats, qp_stack,
                                             use_kernel=use_kernel,
-                                            fused=fused)
+                                            fused=fused, banks=banks)
             wrong = jnp.argmax(logits, -1) != labels[None]  # (P, B*, T)
             if self._folded:
                 p, _, t = wrong.shape
                 return jnp.sum(wrong.reshape(p, n_sub, -1, t), axis=(2, 3))
             return jnp.sum(wrong, axis=(1, 2))
 
+        donate = (4,) if jax.default_backend() != "cpu" else ()
         if mesh is None:
-            self._batch_err = jax.jit(_batch_err)
+            self._batch_err = jax.jit(_batch_err, donate_argnums=donate)
         else:
             sharded = pop_sharding.shard_population(
-                _batch_err, mesh, n_replicated=3, axis=pop_axis,
+                _batch_err, mesh, n_replicated=4, axis=pop_axis,
                 mode=partition)
             if partition == "gspmd":
                 # activate the "pop" logical-axis rule so the constraints
                 # inside forward_population bind to this mesh at trace time
-                def call(params, feats, labels, qp_stack,
+                def call(params, banks, feats, labels, qp_stack,
                          _f=sharded, _m=mesh):
                     with dist_sharding.axis_rules(_m):
-                        return _f(params, feats, labels, qp_stack)
+                        return _f(params, banks, feats, labels, qp_stack)
                 self._batch_err = call
             else:
                 self._batch_err = sharded
 
+    def _banks_for(self, params):
+        """Quantized-weight banks for a parameter set, built on first use.
+        Keyed by object identity: the GA evaluates thousands of candidates
+        against a handful of parameter sets (base + retrained beacons), so
+        each set pays one bank build and every later generation gathers.
+        With equal-shaped (folded) subsets the banks are extended with the
+        input-layer u-bank (every (a_bits, w_bits) combination of L0's
+        quantize+MxV precomputed against the frozen validation fold)."""
+        if not self.use_banks:
+            return None
+        from repro.models import sru
+        key = id(params)
+        if key not in self._banks:
+            banks = self._make_banks(params)
+            if (self._folded and self._qp_tables is not None
+                    and self.cfg.input_dim != self.cfg.hidden):
+                banks = sru.extend_banks_u0(banks, self.cfg,
+                                            self._feats_all,
+                                            self._qp_tables[1][0])
+            self._banks[key] = (params, banks)
+        return self._banks[key][1]
+
     def _stack(self, allocs: Sequence[Alloc]) -> np.ndarray:
-        qps = [self.make_qp(a) for a in allocs]
-        stack = stack_qps(qps, self.layer_names)
+        if self.use_banks and self._qp_tables is not None:
+            # menu indexing: gather the per-layer triple rows directly
+            w_t, a_t = self._qp_tables
+            code = self._menu_code
+            wc = np.asarray([[code[a[nm][0]] for nm in self.layer_names]
+                             for a in allocs])
+            ac = np.asarray([[code[a[nm][1]] for nm in self.layer_names]
+                             for a in allocs])
+            li = np.arange(len(self.layer_names))[None]
+            stack = np.concatenate([w_t[li, wc], a_t[li, ac]], -1)
+        else:
+            qps = [self.make_qp(a) for a in allocs]
+            stack = stack_qps(qps, self.layer_names)
         target = pop_sharding.padded_pop(bucket_size(len(allocs)),
                                          self._n_shards)
         pad = target - len(allocs)
@@ -173,16 +262,18 @@ class BatchedSRUEvaluator:
         if not allocs:
             return []
         stack = self._stack(allocs)
+        banks = self._banks_for(params)
         p = len(allocs)
         if self._folded:
             wrong = np.asarray(pop_sharding.gather_counts(self._batch_err(
-                params, self._feats_all, self._labels_all, stack)))  # (P, S)
+                params, banks, self._feats_all, self._labels_all,
+                stack)))                                             # (P, S)
             errs = 100.0 * wrong[:p].astype(np.int64) / self._subset_frames
             return np.max(errs, axis=1).tolist()
         per_subset = []
         for feats, labels in self.val_subsets:
             wrong = np.asarray(pop_sharding.gather_counts(
-                self._batch_err(params, feats, labels, stack)))
+                self._batch_err(params, banks, feats, labels, stack)))
             per_subset.append(100.0 * wrong[:p].astype(np.int64)
                               / int(np.asarray(labels).size))
         return np.max(np.stack(per_subset), axis=0).tolist()

@@ -38,7 +38,65 @@ def dominates(a: Individual, b: Individual) -> bool:
     return bool(np.all(ao <= bo) and np.any(ao < bo))
 
 
+def _dominance_matrix(pop: List[Individual]) -> np.ndarray:
+    """Boolean (N, N) matrix D with D[i, j] == dominates(pop[i], pop[j]),
+    built from whole-population broadcasts (Deb's feasibility rule folded
+    in) instead of N^2 Python ``dominates`` calls."""
+    O = np.stack([np.asarray(p.objectives, float) for p in pop])
+    V = np.asarray([p.violation for p in pop], float)
+    with np.errstate(invalid="ignore"):       # inf-inf comparisons are fine
+        le = (O[:, None, :] <= O[None, :, :]).all(-1)
+        lt = (O[:, None, :] < O[None, :, :]).any(-1)
+    feas = V == 0.0
+    both_f = feas[:, None] & feas[None, :]
+    D = np.where(both_f, le & lt,
+                 np.where(feas[:, None] & ~feas[None, :], True,
+                          np.where(~feas[:, None] & ~feas[None, :],
+                                   V[:, None] < V[None, :], False)))
+    np.fill_diagonal(D, False)
+    return D
+
+
 def fast_non_dominated_sort(pop: List[Individual]) -> List[List[Individual]]:
+    """Vectorized fast non-dominated sort: one numpy dominance matrix and
+    iterative front peeling instead of the O(N^2) Python double loop
+    (``_fast_non_dominated_sort_loop``, kept as the parity reference).
+    Front membership, rank assignment AND the within-front order reproduce
+    the loop implementation exactly — front k+1 is emitted in the order
+    candidates hit zero remaining dominators there (position of their last
+    dominator inside front k, ties by index), which matters for crowding
+    tie-breaks downstream."""
+    if not pop:
+        return []
+    D = _dominance_matrix(pop)
+    n = D.sum(axis=0).astype(np.int64)        # dominator counts
+    fronts_idx: List[np.ndarray] = []
+    current = np.flatnonzero(n == 0)
+    rank = 0
+    while current.size:
+        for i in current:
+            pop[i].rank = rank
+        fronts_idx.append(current)
+        sub = D[current]                      # (front, N)
+        n = n - sub.sum(axis=0)
+        n[current] = -1                       # processed: never ready again
+        ready = np.flatnonzero(n == 0)
+        if ready.size:
+            # loop-order reconstruction: a candidate was appended when its
+            # LAST dominator within the current front was processed
+            pos = np.where(sub[:, ready],
+                           np.arange(len(current))[:, None], -1).max(axis=0)
+            ready = ready[np.lexsort((ready, pos))]
+        current = ready
+        rank += 1
+    return [[pop[i] for i in f] for f in fronts_idx]
+
+
+def _fast_non_dominated_sort_loop(
+        pop: List[Individual]) -> List[List[Individual]]:
+    """Reference O(N^2) Python implementation (Deb et al. 2002 as written);
+    the vectorized ``fast_non_dominated_sort`` must match it exactly —
+    see tests/test_nsga2.py::TestVectorizedParity."""
     S = [[] for _ in pop]
     n = [0] * len(pop)
     fronts: List[List[int]] = [[]]
@@ -68,6 +126,32 @@ def fast_non_dominated_sort(pop: List[Individual]) -> List[List[Individual]]:
 
 
 def assign_crowding(front: List[Individual]) -> None:
+    """Vectorized crowding assignment. Semantics replicate the in-place
+    loop version (``_assign_crowding_loop``) exactly, including its
+    sequential stable re-sorts: objective m is argsorted over the order the
+    previous objective left behind, so tie-breaks (and which tied extreme
+    gets the inf) are identical, and the front list is left re-ordered by
+    the LAST objective as before (survival selection observes that order)."""
+    if not front:
+        return
+    O = np.stack([np.asarray(ind.objectives, float) for ind in front])
+    K, M = O.shape
+    crowd = np.zeros(K)
+    order = np.arange(K)
+    for m in range(M):
+        order = order[np.argsort(O[order, m], kind="stable")]
+        om = O[order, m]
+        crowd[order[0]] = crowd[order[-1]] = np.inf
+        lo, hi = om[0], om[-1]
+        if np.isfinite(lo) and np.isfinite(hi) and hi - lo > 0:
+            crowd[order[1:-1]] += (om[2:] - om[:-2]) / (hi - lo)
+    for i, ind in enumerate(front):
+        ind.crowding = crowd[i]
+    front[:] = [front[i] for i in order]
+
+
+def _assign_crowding_loop(front: List[Individual]) -> None:
+    """Reference implementation (kept for the vectorization parity tests)."""
     if not front:
         return
     n_obj = len(front[0].objectives)
@@ -233,7 +317,19 @@ def _dedup(front: List[Individual]) -> List[Individual]:
 
 
 def pareto_front(points: np.ndarray) -> np.ndarray:
-    """Indices of the non-dominated rows of a (minimization) objective matrix."""
+    """Indices of the non-dominated rows of a (minimization) objective
+    matrix — one broadcasted dominance matrix instead of the O(N^2) Python
+    scan (``_pareto_front_loop``, kept as the parity reference)."""
+    pts = np.asarray(points, float)
+    if pts.size == 0:
+        return np.asarray([], int)
+    le = (pts[:, None, :] <= pts[None, :, :]).all(-1)
+    lt = (pts[:, None, :] < pts[None, :, :]).any(-1)
+    return np.flatnonzero(~(le & lt).any(axis=0))
+
+
+def _pareto_front_loop(points: np.ndarray) -> np.ndarray:
+    """Reference implementation (kept for the vectorization parity tests)."""
     keep = []
     for i, p in enumerate(points):
         if not any(np.all(q <= p) and np.any(q < p) for q in points):

@@ -122,6 +122,56 @@ def fake_quant_triple(x, scale, lo, hi, use_ste: bool = True):
     return ste(x, q) if use_ste else q
 
 
+# ---------------------------------------------------- quantized-weight banks
+#
+# The search menu is tiny ({2, 4, 8, 16} bits) and the per-layer quantization
+# grids are frozen after calibration: for a given full-precision weight
+# tensor, at most ``len(menu)`` distinct fake-quantized tensors can ever
+# appear during a whole GA search. A *bank* precomputes them once — row k is
+# the weight under menu entry k — so population evaluation gathers rows
+# (``jnp.take`` by menu index) instead of re-fake-quantizing per lane per
+# call. Memory cost: |menu| full copies of each weight tensor.
+#
+# Bit-parity contract: bank rows are built by ``fake_quant_triple`` with the
+# triples passed as *traced arrays* (never baked-in constants), i.e. the
+# exact per-element expression the on-the-fly paths execute — scalar
+# ``forward(qp=)`` and the fused population ``q_w`` vmap — so a gathered row
+# is bitwise identical to requantizing on the fly (including the 16-bit
+# fixed-point grid, which ``quant_triple`` expresses as a plain
+# (scale, -32768, 32767) triple).
+
+@jax.jit
+def build_weight_bank(w, triples):
+    """Stack fake-quantized copies of ``w``: (K, *w.shape) where row k is
+    ``fake_quant_triple(w, *triples[k])``. ``triples``: (K, 3) float32 of
+    (scale, lo, hi) grids — one per menu entry, from ``menu_triples``."""
+    triples = jnp.asarray(triples, jnp.float32)
+    return jax.vmap(lambda t: fake_quant_triple(w, t[0], t[1], t[2]))(triples)
+
+
+def menu_triples(bits_menu, clip_of_bits) -> np.ndarray:
+    """(K, 3) float32 of ``quant_triple`` rows for a per-layer menu.
+    ``clip_of_bits(bits)`` supplies the MMSE clip (int grids) or data range
+    (16-bit fixed point) — frozen after calibration, which is what makes the
+    bank valid for a whole search."""
+    return np.asarray([quant_triple(b, clip_of_bits(b)) for b in bits_menu],
+                      np.float32)
+
+
+def menu_index_from_hi(w_hi, bits_menu=SUPPORTED_BITS):
+    """Map a weight triple's grid-top value back to its menu slot (the bank
+    row index). Each menu entry has a distinct, exactly-representable ``hi``
+    (1, 7, 127 for int grids; 32767 for the 16-bit fixed-point grid), so the
+    allocation's bit-width is recoverable from the (P, L, 6) qp grid stack
+    alone — no side-channel index array has to be threaded to the forward."""
+    tops = [32767.0 if b == 16 else float(INT_RANGES[b][1])
+            for b in bits_menu]
+    idx = jnp.zeros(jnp.shape(w_hi), jnp.int32)
+    for t in sorted(tops)[:-1]:
+        idx = idx + (w_hi > t).astype(jnp.int32)
+    return idx
+
+
 class ActRangeCalibrator:
     """Records per-layer activation ranges; expected range = median of
     per-sequence max-abs (paper: 70 sequences suffice)."""

@@ -73,34 +73,77 @@ class TrainedSRU:
         return sru.quant_triples_for(alloc, self.wclips, self.act_ranges,
                                      self.wranges)
 
+    def make_banks(self, params):
+        """Quantized-weight banks for ``params`` against this model's
+        frozen post-calibration grids (MMSE clips / weight ranges). The
+        batched evaluator calls this once per distinct parameter set (base
+        model, each retrained beacon) and caches the result."""
+        return sru.build_weight_banks(params, self.cfg, self.wclips,
+                                      self.wranges)
+
+    def qp_menu_tables(self):
+        """Per-layer menu-indexed quantization-grid tables: two
+        (L, |menu|, 3) float32 arrays of weight / activation
+        ``quant_triple`` rows in ``Q.SUPPORTED_BITS`` order. Built once per
+        trained model; the banked evaluator assembles each generation's
+        (P, L, 6) qp stack by pure numpy indexing into these tables
+        (bitwise-identical rows to per-candidate ``quant_triples_for``, at
+        a fraction of the per-generation Python cost) and reads L0's
+        activation row for the input-layer u-bank."""
+        if getattr(self, "_qp_tables", None) is None:
+            names = list(self.cfg.layer_names())
+            K = len(Q.SUPPORTED_BITS)
+            w_t = np.empty((len(names), K, 3), np.float32)
+            a_t = np.empty((len(names), K, 3), np.float32)
+            for i, nm in enumerate(names):
+                for k, b in enumerate(Q.SUPPORTED_BITS):
+                    w_t[i, k] = Q.quant_triple(
+                        b, self.wranges[nm] if b == 16
+                        else self.wclips[(nm, b)])
+                    a_t[i, k] = Q.quant_triple(b, self.act_ranges[nm])
+            self._qp_tables = (w_t, a_t)
+        return self._qp_tables
+
     def batched_evaluator(self, fused: bool = True, mesh=None,
-                          partition: str = "shard_map"
+                          partition: str = "shard_map",
+                          use_banks: Optional[bool] = None
                           ) -> batched_eval.BatchedSRUEvaluator:
         """Lazily-built population evaluator (one jitted call scores a
         whole GA generation; compiled per population-size bucket).
         ``fused=True`` is the v2 population-axis forward; ``fused=False``
-        keeps the PR-1 vmap lowering for comparison. ``mesh`` shards the
-        population axis across its "pop" device axis (``partition`` picks
-        the shard_map or GSPMD lowering, see distributed.pop_sharding)."""
+        keeps the PR-1 vmap lowering for comparison. ``use_banks`` controls
+        the quantized-weight-bank gather (default: on for the fused/kernel
+        lanes — ``use_banks=False`` keeps the requantize-per-lane v2 path
+        for benchmarking). ``mesh`` shards the population axis across its
+        "pop" device axis (``partition`` picks the shard_map or GSPMD
+        lowering, see distributed.pop_sharding)."""
         # Mesh hashes by devices + axis names, so equivalent meshes built
         # fresh per call share one compiled evaluator
-        key = (fused, mesh, partition if mesh is not None else "")
+        if use_banks is None:
+            use_banks = fused
+        key = (fused, use_banks, mesh, partition if mesh is not None else "")
         if key not in self._batched_eval:
             self._batched_eval[key] = batched_eval.BatchedSRUEvaluator(
                 self.cfg, self.val_subsets, self.qp_for, fused=fused,
-                mesh=mesh, partition=partition)
+                mesh=mesh, partition=partition,
+                make_banks=self.make_banks, use_banks=use_banks,
+                qp_tables=self.qp_menu_tables())
         return self._batched_eval[key]
 
     def val_error_batch(self, allocs, params=None, *, fused: bool = True,
-                        mesh=None, partition: str = "shard_map"):
+                        mesh=None, partition: str = "shard_map",
+                        use_banks: Optional[bool] = None):
         """Batched counterpart of ``val_error``: max error over the 4
         validation subsets for EVERY allocation in one call. Matches the
         scalar path exactly (integer error counts). ``params`` selects the
         full-precision parameter set (base or a retrained beacon's);
-        ``mesh`` partitions the candidates across devices."""
+        ``use_banks`` picks bank-gather vs requantize weight prep (banks by
+        default on the fused lane — bitwise identical, one bank build per
+        parameter set); ``mesh`` partitions the candidates across devices."""
         params = self.params if params is None else params
         return self.batched_evaluator(fused=fused, mesh=mesh,
-                                      partition=partition
+                                      partition=partition,
+                                      use_banks=use_banks
                                       ).errors(allocs, params)
 
     def val_error(self, alloc: Optional[Alloc] = None,

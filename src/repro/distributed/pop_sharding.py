@@ -5,10 +5,17 @@ The GA search scores whole populations per generation through
 completely independent (one quantization candidate per lane, no cross-lane
 reduction anywhere in the forward or the error count). That independence
 makes the population axis trivially data-parallel: partition P across a
-1-D device mesh, replicate everything else (parameters, validation
-features/labels, and the calibration-derived quantization grids baked into
-``qp_stack`` rows), and gather the per-candidate integer error counts back
-to the host.
+1-D device mesh, replicate everything else (parameters, the precomputed
+quantized-weight banks, validation features/labels, and the
+calibration-derived quantization grids baked into ``qp_stack`` rows), and
+gather the per-candidate integer error counts back to the host.
+
+Quantized-weight banks shard like parameters: the (|menu|, m, h) stacks
+replicate to every device and each shard gathers its local lanes' rows
+(``jnp.take`` by menu index) inside its own program — the gather is
+per-lane, so replicated-bank + sharded-index is exactly the single-device
+gather restricted to the shard's lanes, and the bit-identical-front
+contract (tests/test_sharded_eval.py) carries over unchanged.
 
 Two partitioned lowerings are provided:
 

@@ -85,6 +85,25 @@ def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def bank_mxv_pop(x, bank, idx, interpret: bool = True):
+    """Padded/jitted population MxV against a quantized-weight bank.
+    x: (P, M, m), bank: (K, m, N) — the K menu-entry fake-quantizations of
+    one weight matrix — idx: (P,) int32 menu indices. Returns (P, M, N),
+    ``out[p] = x[p] @ bank[idx[p]]``. The row gather happens inside the
+    Pallas grid via a scalar-prefetched index (see sru_scan.bank_mxv_pop):
+    no per-lane requantize pass and no (P, m, N) expanded weights."""
+    P, M, m = x.shape
+    N = bank.shape[-1]
+    bm = 8 if M >= 8 else M
+    bn = 128 if N >= 128 else _next_mult(N, 8)
+    x_p, _ = _pad_to(x, bm, 1)
+    b_p, _ = _pad_to(bank, bn, 2)
+    out = _sru.bank_mxv_pop(x_p, b_p, idx.astype(jnp.int32),
+                            block=(bm, bn), interpret=interpret)
+    return out[:, :M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def sru_scan_pop(uw, uf, ur, v_f, v_r, b_f, b_r, interpret: bool = True):
     """Padded/jitted population-axis SRU scan. uw/uf/ur: (P, B, T, n) — one
     quantization candidate per lane, v/b shared. Returns (h, r), both

@@ -22,6 +22,13 @@ Grid layouts:
   (1, bb, T, bn) for the streams; the per-channel vectors are shared across
   the population (same underlying weights, per-candidate quantization is
   applied to the u streams upstream).
+- ``bank_mxv_pop``: grid (P, M/bm, N/bn) over a *quantized-weight bank* —
+  the (K, m, N) stack of the K menu-entry fake-quantizations of one weight
+  matrix. The per-lane bank row index is a scalar-prefetch operand
+  (``PrefetchScalarGridSpec``), so the bank BlockSpec's index_map reads
+  ``idx_ref[p]`` and each grid step DMAs the *selected* row's (m, bn) tile
+  straight from the bank — gather-don't-requantize: no per-lane quantize
+  pass, and no (P, m, N) expanded weight array ever exists in HBM.
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _sru_kernel(uw_ref, uf_ref, ur_ref, vf_ref, vr_ref, bf_ref, br_ref,
@@ -108,6 +116,51 @@ def _sru_kernel_pop(uw_ref, uf_ref, ur_ref, vf_ref, vr_ref, bf_ref, br_ref,
 
     c_last = jax.lax.fori_loop(0, T, body, c0)
     cl_ref[...] = c_last[None]
+
+
+def _bank_mxv_kernel(idx_ref, x_ref, bank_ref, o_ref):
+    # idx_ref is the scalar-prefetch operand; the gather already happened in
+    # bank_ref's index_map, so the body is a plain blocked matmul
+    del idx_ref
+    o_ref[0] = jnp.dot(x_ref[0], bank_ref[0],
+                       preferred_element_type=jnp.float32)
+
+
+def bank_mxv_pop(x, bank, idx, block: Tuple[int, int] = (8, 128),
+                 interpret: bool = False):
+    """Population MxV against a quantized-weight bank, gather-in-grid.
+
+    x: (P, M, m) f32 per-lane quantized activations; bank: (K, m, N) f32 —
+    row k is the weight fake-quantized to menu entry k; idx: (P,) int32 —
+    each lane's menu index. Returns (P, M, N) with
+    ``out[p] = x[p] @ bank[idx[p]]``.
+
+    ``idx`` rides in as a scalar-prefetch operand so the bank BlockSpec's
+    index_map can select the row per grid step: the kernel streams the
+    CHOSEN bank tile from HBM instead of a per-lane requantized (or
+    pre-gathered) (P, m, N) weight array. M and N must divide the block
+    sizes (ops.bank_mxv_pop pads for you)."""
+    P, M, m = x.shape
+    K, m2, N = bank.shape
+    assert m == m2 and idx.shape == (P,), (x.shape, bank.shape, idx.shape)
+    bm, bn = block
+    assert M % bm == 0 and N % bn == 0, (x.shape, block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(P, M // bm, N // bn),
+        in_specs=[pl.BlockSpec((1, bm, m), lambda p, i, j, idx_ref:
+                               (p, i, 0)),
+                  pl.BlockSpec((1, m, bn), lambda p, i, j, idx_ref:
+                               (idx_ref[p], 0, j))],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda p, i, j, idx_ref:
+                               (p, i, j)),
+    )
+    return pl.pallas_call(
+        _bank_mxv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, M, N), jnp.float32),
+        interpret=interpret,
+    )(idx, x, bank)
 
 
 def sru_scan_pop(uw, uf, ur, v_f, v_r, b_f, b_r,

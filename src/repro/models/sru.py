@@ -15,6 +15,15 @@ Quantization boundary (paper §4.1): only the MxV weight matrices and their
 input activations carry searchable precision; v_f, v_r and biases stay 16-bit
 fixed point. The model exposes exactly 8 quantizable layers
 (L0, Pr1, L1, Pr2, L2, Pr3, L3, FC) — a 16-variable MOHAQ genome.
+
+Quantized-weight banks (PR 4): the precision menu is {2, 4, 8, 16} and
+every grid freezes after calibration, so each layer weight has at most
+|menu| distinct fake-quantized forms across a whole search.
+``build_weight_banks`` precomputes them (|menu| weight copies of memory,
+once per parameter set) and ``forward_population(banks=)`` gathers rows by
+menu index instead of requantizing per lane per call — bitwise identical to
+the on-the-fly paths by construction. ``extend_banks_u0`` additionally
+freezes the input layer's quantize+MxV for a fixed validation fold.
 """
 from __future__ import annotations
 
@@ -183,6 +192,42 @@ def quant_triples_for(alloc, wclips: Dict[Tuple[str, int], float],
     return qp
 
 
+def build_weight_banks(params, cfg: SRUModelConfig,
+                       wclips: Dict[Tuple[str, int], float],
+                       wranges: Dict[str, float],
+                       menu: Tuple[int, ...] = Q.SUPPORTED_BITS):
+    """Precompute the quantized-weight banks for a parameter set.
+
+    Returns a pytree mirroring ``params``: each MxV weight becomes a stacked
+    bank ``(len(menu), m, h)`` whose row k is the weight fake-quantized to
+    ``menu[k]`` bits against the frozen post-calibration grids — the same
+    ``quant_triple`` grids the on-the-fly paths use (MMSE clips for 2/4/8,
+    the data range for the 16-bit fixed-point row), so bank rows are bitwise
+    identical to per-call requantization. The 16-bit recurrent vectors and
+    biases (menu-independent) are quantized once alongside.
+
+    Cost: ``len(menu)`` full copies of every MxV weight — for the paper
+    model ~4x the weight footprint, paid once per parameter set (base model
+    or retrained beacon) and reused for every candidate of every generation.
+    ``forward_population(banks=...)`` then gathers rows by menu index
+    instead of requantizing per lane per call."""
+    fixed16 = jax.jit(Q.fixed_point_16)
+    banks: Dict = {}
+    for name in cfg.layer_names():
+        trips = Q.menu_triples(
+            menu, lambda b: wranges[name] if b == 16 else wclips[(name, b)])
+        if name.startswith("L"):
+            banks[name] = {
+                d: {"W": Q.build_weight_bank(params[name][d]["W"], trips),
+                    "v": fixed16(params[name][d]["v"]),
+                    "b": fixed16(params[name][d]["b"])}
+                for d in ("fwd", "bwd")}
+        else:
+            banks[name] = {"W": Q.build_weight_bank(params[name]["W"],
+                                                    trips)}
+    return banks
+
+
 def weight_ranges(params, cfg: SRUModelConfig) -> Dict[str, float]:
     out = {}
     for name in cfg.layer_names():
@@ -268,7 +313,8 @@ def forward(params, cfg: SRUModelConfig, feats,
 
 
 def forward_population(params, cfg: SRUModelConfig, feats, qp_stack,
-                       use_kernel: bool = False, fused: bool = True):
+                       use_kernel: bool = False, fused: bool = True,
+                       banks=None):
     """Population-parameterized forward: score P quantization candidates in
     ONE jitted call.
 
@@ -278,12 +324,23 @@ def forward_population(params, cfg: SRUModelConfig, feats, qp_stack,
     ``quant_triples_for``. Params and feats are closed over (broadcast, not
     vmapped). Returns logits (P, B, T, n_outputs).
 
+    ``banks`` (optional): precomputed quantized-weight banks from
+    ``build_weight_banks`` for the SAME ``params``. When given, the fused
+    and kernel lanes *gather* each lane's quantized weight — row
+    ``menu_index_from_hi(w_hi)`` of the (|menu|, m, h) bank — instead of
+    fake-quantizing every weight tensor per lane per call. Only activations
+    (data-dependent) are still quantized on the fly. Bank rows are built by
+    the identical ``fake_quant_triple`` expression, so the gathered lane is
+    bitwise equal to the requantized one; all parity contracts hold
+    unchanged.
+
     Three lowerings, all computing bit-identical per-element arithmetic to
     the scalar ``forward(qp=)`` path (the GA's Pareto fronts are exact):
 
     - ``fused=False, use_kernel=False``: the PR-1 reference — ``jax.vmap``
       of the scalar forward over the grid axis (XLA batches the einsums and
-      scans itself). Kept for benchmarking/regression comparison.
+      scans itself). Kept for benchmarking/regression comparison; does not
+      support ``banks``.
     - ``fused=True`` (default): explicit population axis. The MxV einsums
       become P-batched matmuls and each Bi-SRU layer's two direction scans
       are fused into ONE ``lax.scan`` over a stacked direction axis with a
@@ -294,9 +351,15 @@ def forward_population(params, cfg: SRUModelConfig, feats, qp_stack,
       runs in the Pallas population-axis kernel (``kernels.ops.sru_scan_pop``)
       whose grid is (P, B/bb, n/bn) — the population feeds the kernel grid
       directly instead of vmapping over ``pallas_call``. In interpret mode
-      the kernel body mirrors the jnp scan step exactly.
+      the kernel body mirrors the jnp scan step exactly. With ``banks`` the
+      MxV additionally runs in ``kernels.ops.bank_mxv_pop``, whose grid
+      reads the selected bank row directly via a scalar-prefetched index
+      (the bank is never expanded to P per-lane copies in memory).
     """
     if not fused and not use_kernel:
+        if banks is not None:
+            raise ValueError("banks require the fused or kernel lowering "
+                             "(the PR-1 vmap reference stays requantizing)")
         names = cfg.layer_names()
 
         def one(qp_rows):                                  # (L, 6) per lane
@@ -305,27 +368,82 @@ def forward_population(params, cfg: SRUModelConfig, feats, qp_stack,
 
         return jax.vmap(one)(qp_stack)
     return _forward_population_fused(params, cfg, feats, qp_stack,
-                                     use_kernel=use_kernel)
+                                     use_kernel=use_kernel, banks=banks)
 
 
 # scan unroll for the fused population path: amortizes XLA while-loop
 # overhead without changing arithmetic (unrolling is exact)
 _POP_SCAN_UNROLL = 4
+# the banked dispatch re-tunes the unroll (measured best on the 2-core CPU
+# box at the compact eval shape); unrolling never changes per-element
+# arithmetic, so the two lanes stay bitwise interchangeable
+_BANK_SCAN_UNROLL = 8
+
+
+def extend_banks_u0(banks, cfg: SRUModelConfig, feats, a_trips):
+    """Add the input-layer u-bank to a quantized-weight bank pytree.
+
+    The first Bi-SRU layer's MxV input is ``fake_quant(feats, a_grid)`` and
+    both operands are menu-indexed: ``feats`` is the same every call (the
+    evaluator's frozen validation fold) and the activation grid and weight
+    are one of |menu| entries each. So the whole L0 product
+    ``u[p] = fq(feats, a_menu[a]) @ W_menu[w]`` takes at most
+    |menu|^2 distinct values per direction — precompute them ALL
+    ((Ka*Kw, B, T, 3n) per direction, row ``a*Kw + w``) and the per-
+    generation dispatch gathers L0's u streams instead of running P
+    activation-quant passes and P batched matmuls.
+
+    ``a_trips``: (Ka, 3) float32 — L0's activation ``quant_triple`` rows in
+    menu order. The stored rows are bound to ``feats``; the evaluator only
+    ever calls the forward with that same fold. Only valid when the L0
+    highway skip is statically inactive (``input_dim != hidden`` — the skip
+    would need the quantized input activations); callers gate on that."""
+    assert cfg.input_dim != cfg.hidden, "u0 bank invalid under highway skip"
+    a_trips = jnp.asarray(a_trips, jnp.float32)
+
+    @jax.jit
+    def u0(bank_w, feats, a_trips):
+        def one_a(t):
+            xq = Q.fake_quant_triple(feats, t[0], t[1], t[2])
+            xf = xq.reshape(-1, xq.shape[-1])                # (B*T, m)
+            return jax.vmap(lambda w: jnp.matmul(xf, w))(bank_w)
+        u = jax.vmap(one_a)(a_trips)                  # (Ka, Kw, B*T, 3n)
+        ka, kw = u.shape[:2]
+        return u.reshape((ka * kw,) + feats.shape[:2] + (u.shape[-1],))
+
+    out = dict(banks)
+    out["L0"] = {key: dict(banks["L0"][key]) for key in ("fwd", "bwd")}
+    for key in ("fwd", "bwd"):
+        out["L0"][key]["U"] = u0(banks["L0"][key]["W"], feats, a_trips)
+    return out
 
 
 def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
-                              use_kernel: bool = False):
+                              use_kernel: bool = False, banks=None):
     """Explicit population-axis forward (see ``forward_population``).
 
     feats (B, T, m) is broadcast to (P, B, T, m); per-lane weight/activation
-    grids come from qp_stack rows. Each Bi-SRU layer runs its two direction
-    recurrences either fused into one scan over a stacked direction axis
-    (jnp path) or through the population-axis Pallas kernel (one call per
-    direction, grid (P, B/bb, n/bn))."""
+    grids come from qp_stack rows. Per-lane quantized weights are either
+    requantized on the fly (``banks=None``) or gathered from the
+    precomputed banks by menu index — bitwise identical, but the gather
+    replaces |layers| x P fake-quant passes per call with pure row selects.
+    Each Bi-SRU layer runs its two direction recurrences in one of three
+    forms, all with identical per-element arithmetic: the requant lane
+    fuses both directions into one scan over a stacked direction axis
+    (PR-2 lowering, byte-for-byte preserved as the benchmark baseline);
+    the banked lane runs one scan per direction with the backward stream
+    scanned ``reverse=True`` (no stack/flip copies, dead reset-gate output
+    elided, larger exact unroll); ``use_kernel=True`` streams through the
+    population-axis Pallas kernel (one call per direction,
+    grid (P, B/bb, n/bn))."""
     names = list(cfg.layer_names())
     li = {n: i for i, n in enumerate(names)}
     P = qp_stack.shape[0]
     n = cfg.hidden
+    # per-lane bank row index, recovered from the weight grid tops — the
+    # qp grid stack stays the only per-candidate input of the dispatch
+    w_idx = (Q.menu_index_from_hi(qp_stack[:, :, 2])
+             if banks is not None else None)
 
     def q_act(name, x):                       # per-lane activation grids
         row = qp_stack[:, li[name]]
@@ -337,9 +455,31 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
         return jax.vmap(lambda s, lo, hi: Q.fake_quant_triple(w, s, lo, hi))(
             row[:, 0], row[:, 1], row[:, 2])
 
+    def bank_of(name, sub=None):
+        node = banks[name] if sub is None else banks[name][sub]
+        return node["W"]
+
+    def lane_w(name, sub=None):
+        """(P, m, h) per-lane quantized weight: bank gather or requant."""
+        if banks is not None:
+            return jnp.take(bank_of(name, sub), w_idx[:, li[name]], axis=0)
+        w = params[name]["W"] if sub is None else params[name][sub]["W"]
+        return q_w(name, w)
+
     def mxv(xq, wq):                          # (P,B,T,m) @ (P,m,h)
         out = jnp.matmul(xq.reshape(P, -1, xq.shape[-1]), wq)
         return out.reshape(xq.shape[:3] + (wq.shape[-1],))
+
+    def mxv_layer(xq, name, sub=None):
+        """Per-lane quantized MxV. With banks + kernel the gather happens
+        INSIDE the Pallas grid (scalar-prefetched row index), so the bank is
+        read in place instead of being expanded to P lane copies first."""
+        if banks is not None and use_kernel:
+            from repro.kernels import ops as kops
+            u = kops.bank_mxv_pop(xq.reshape(P, -1, xq.shape[-1]),
+                                  bank_of(name, sub), w_idx[:, li[name]])
+            return u.reshape(xq.shape[:3] + (u.shape[-1],))
+        return mxv(xq, lane_w(name, sub))
 
     x = jnp.broadcast_to(feats, (P,) + feats.shape)          # (P,B,T,m)
     # anchor the population lane on the mesh's "pop" axis (no-op outside an
@@ -349,17 +489,80 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
     for i in range(cfg.n_sru_layers):
         name = f"L{i}"
         lp = params[name]
-        xq = q_act(name, x)
+        # input-layer u-bank (see extend_banks_u0): L0's whole quantize+MxV
+        # collapses to one row gather per direction; statically skipped when
+        # the highway would need the quantized input
+        use_u0 = (i == 0 and banks is not None
+                  and "U" in banks["L0"]["fwd"] and feats.shape[-1] != n)
+        if use_u0:
+            a_idx0 = Q.menu_index_from_hi(qp_stack[:, li[name], 5])
+            n_w = banks[name]["fwd"]["W"].shape[0]
+            combo = a_idx0 * n_w + w_idx[:, li[name]]
+            xq = None
+        else:
+            xq = q_act(name, x)
+        if banks is not None and not use_kernel:
+            # banked dispatch: one scan per direction, the backward stream
+            # scanned with reverse=True — no direction stacking and no time
+            # flips (the reverse scan reads/writes positions in place, so
+            # outputs come back aligned). Identical per-element arithmetic
+            # to the stacked lane; the dead reset-gate output is elided when
+            # the highway skip is statically inactive.
+            highway = x.shape[-1] == n
+            hs = []
+            for key in ("fwd", "bwd"):
+                if use_u0:
+                    # re-anchor the lane axis here: with L0 gathered from
+                    # the u-bank the broadcast input (the usual anchor) is
+                    # dead code, so GSPMD must pick the partitioning up
+                    # from the gathered stream
+                    u = dist_shard(
+                        jnp.take(banks[name][key]["U"], combo, axis=0),
+                        "pop")
+                else:
+                    u = mxv_layer(xq, name, key)             # (P,B,T,3n)
+                uw, uf, ur = u[..., :n], u[..., n:2 * n], u[..., 2 * n:]
+                v, b = banks[name][key]["v"], banks[name][key]["b"]
+
+                def step(c, t3, v=v, b=b):
+                    uw_t, uf_t, ur_t = t3                    # (P,B,n)
+                    f = jax.nn.sigmoid(uf_t + v[0] * c + b[0])
+                    r = jax.nn.sigmoid(ur_t + v[1] * c + b[1])
+                    c_new = f * c + (1.0 - f) * uw_t
+                    return c_new, ((r * c_new, r) if highway
+                                   else (r * c_new,))
+
+                tr = lambda a: a.transpose(2, 0, 1, 3)       # (T,P,B,n)
+                _, out = jax.lax.scan(
+                    step, jnp.zeros((P, x.shape[1], n), jnp.float32),
+                    (tr(uw), tr(uf), tr(ur)),
+                    unroll=_BANK_SCAN_UNROLL, reverse=(key == "bwd"))
+                h = out[0].transpose(1, 2, 0, 3)             # (P,B,T,n)
+                if highway:                                  # aligned: no flip
+                    h = h + (1.0 - out[1].transpose(1, 2, 0, 3)) * xq
+                hs.append(h)
+            x = jnp.concatenate(hs, axis=-1)
+            if i < cfg.n_sru_layers - 1:
+                pname = f"Pr{i + 1}"
+                x = mxv_layer(q_act(pname, x), pname)
+            continue
+
         streams, vecs = [], []
         for key in ("fwd", "bwd"):
             dp = lp[key]
-            u = mxv(xq, q_w(name, dp["W"]))                  # (P,B,T,3n)
+            if use_u0:
+                u = jnp.take(banks[name][key]["U"], combo, axis=0)
+            else:
+                u = mxv_layer(xq, name, key)                 # (P,B,T,3n)
             uw, uf, ur = u[..., :n], u[..., n:2 * n], u[..., 2 * n:]
             if key == "bwd":
                 uw, uf, ur = uw[:, :, ::-1], uf[:, :, ::-1], ur[:, :, ::-1]
             streams.append((uw, uf, ur))
-            vecs.append((Q.fixed_point_16(dp["v"]),
-                         Q.fixed_point_16(dp["b"])))
+            if banks is not None:             # 16-bit vectors pre-quantized
+                vecs.append((banks[name][key]["v"], banks[name][key]["b"]))
+            else:
+                vecs.append((Q.fixed_point_16(dp["v"]),
+                             Q.fixed_point_16(dp["b"])))
 
         if use_kernel:
             from repro.kernels import ops as kops
@@ -401,9 +604,9 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
         x = jnp.concatenate([hs[0], hs[1][:, :, ::-1]], axis=-1)
         if i < cfg.n_sru_layers - 1:
             pname = f"Pr{i + 1}"
-            x = mxv(q_act(pname, x), q_w(pname, params[pname]["W"]))
+            x = mxv_layer(q_act(pname, x), pname)
     xq = q_act("FC", x)
-    logits = mxv(xq, q_w("FC", params["FC"]["W"])) + params["FC"]["b"]
+    logits = mxv_layer(xq, "FC") + params["FC"]["b"]
     return dist_shard(logits, "pop")
 
 
