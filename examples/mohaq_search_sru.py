@@ -1,4 +1,5 @@
-"""The paper's three experiments end to end (Figs 7-10, Tables 5-8).
+"""The paper's three experiments end to end (Figs 7-10, Tables 5-8),
+through the model-agnostic SearchTarget API.
 
 Trains the SRU speech model on the synthetic TIMIT stand-in, then:
   exp1: NSGA-II minimizing (error, memory)            — paper §5.2
@@ -6,12 +7,19 @@ Trains the SRU speech model on the synthetic TIMIT stand-in, then:
   exp3: Bitfusion, (error, speedup), small SRAM;
         inference-only THEN beacon-based search       — paper §5.4
 
+Platforms come from the registry (``get_platform("silago")``, ...) and
+each experiment is a ``SearchSession`` over the trained target — the same
+facade `examples/mohaq_search_xlstm.py` drives for the second
+architecture. (The historical ``experiment1-3`` entrypoints still work as
+deprecation shims over exactly these sessions.)
+
 Run: PYTHONPATH=src python examples/mohaq_search_sru.py [--fast]
 """
 import argparse
 import time
 
 from repro.core import sru_experiment as X
+from repro.core.api import SearchSession, get_platform
 
 
 def main():
@@ -37,43 +45,49 @@ def main():
     print(f"  candidate evaluation: "
           f"{'batched (one vmapped call per generation)' if batched else 'per-candidate scalar'}")
 
+    run_kw = dict(generations=gens, pop=10, initial=24, seed=0)
+
     print(f"\n[2/4] experiment 1 — (error, memory), {gens} generations")
     t1 = time.time()
-    res1 = X.experiment1_memory(trained, generations=gens, batched=batched,
-                                log=lambda m: print("   ", m))
+    res1 = SearchSession(trained, "mem-only", ("error", "memory"),
+                         batched=batched).run(
+        log=lambda m: print("   ", m), **run_kw)
     print(f"  {res1.n_evals} candidate evals in {time.time()-t1:.1f}s "
           f"({(time.time()-t1)/max(res1.n_evals,1)*1e3:.0f} ms/eval)")
-    rows = X.result_table(res1, trained)
-    print(X.format_rows(rows))
+    print(res1.format())
 
     print(f"\n[3/4] experiment 2 — SiLago (error, speedup, energy)")
-    res2 = X.experiment2_silago(trained, generations=gens, batched=batched,
-                                log=lambda m: print("   ", m))
-    rows2 = X.result_table(res2, trained)
-    print(X.format_rows(rows2))
-    best = max(r["speedup"] for r in rows2)
+    silago = get_platform("silago")
+    sram = int(trained.cfg.total_weights() * 32 / 8 / 3.5)
+    res2 = SearchSession(trained, silago, ("error", "speedup", "energy"),
+                         sram_override=sram, batched=batched).run(
+        log=lambda m: print("   ", m), **run_kw)
+    print(res2.format())
+    best = max(r["speedup"] for r in res2.rows())
     print(f"  max speedup found {best:.1f}x of SiLago max 4.0x "
           f"({100*best/3.947:.0f}% of the all-4-bit bound)")
 
     print(f"\n[4/4] experiment 3 — Bitfusion 10.6x-SRAM bound")
-    res3, _ = X.experiment3_bitfusion(trained, generations=gens,
-                                      batched=batched)
-    rows3 = X.result_table(res3, trained)
+    mat = sum(trained.layer_weights.values())
+    sram3 = int((mat * 3.5 + trained.vector_weights * 16) / 8)
+    sess3 = SearchSession(trained, "bitfusion", ("error", "speedup"),
+                          sram_override=sram3, batched=batched)
+    res3 = sess3.run(**run_kw)
     print("  inference-only search:")
-    print(X.format_rows(rows3))
+    print(res3.format())
 
-    res3b, bs = X.experiment3_bitfusion(trained, generations=gens,
-                                        beacon=True)
-    rows3b = X.result_table(res3b, trained)
+    res3b = sess3.run(beacons=True, **run_kw)
+    bs = res3b.beacon_search
     print(f"  beacon-based search ({bs.n_retrains} beacons retrained):")
-    print(X.format_rows(rows3b))
+    print(res3b.format())
 
     def best_at(rows, err_budget):
         ok = [r for r in rows
               if r["error"] <= trained.baseline_val_error + err_budget]
         return max((r["speedup"] for r in ok), default=float("nan"))
     for budget in (2.0, 4.0, 8.0):
-        a, b = best_at(rows3, budget), best_at(rows3b, budget)
+        a = best_at(res3.rows(), budget)
+        b = best_at(res3b.rows(), budget)
         print(f"  max speedup within +{budget:.0f}pp: inference-only {a:.1f}x"
               f" vs beacon {b:.1f}x")
     print(f"\ndone in {time.time()-t0:.0f}s")

@@ -64,6 +64,7 @@ def sharded_demo():
     import jax
 
     from repro.core import sru_experiment as X
+    from repro.core.api import SearchSession, get_platform
     from repro.launch.mesh import make_population_mesh
 
     trained = X.train_small_sru(steps=40)
@@ -71,28 +72,24 @@ def sharded_demo():
     n_dev = len(jax.devices())
     print(f"population mesh: 1-D 'pop' axis over {n_dev} device(s)")
 
-    kw = dict(n_generations=3, pop_size=8, initial_pop_size=16, seed=0)
-    prob_m = X.build_problem(trained, X.BITFUSION, ("error", "speedup"),
-                             mesh=mesh)
-    prob_s = X.build_problem(trained, X.BITFUSION, ("error", "speedup"))
-    prob_m.error_memo = {}
-    prob_s.error_memo = {}
+    kw = dict(generations=3, pop=8, initial=16, seed=0)
+    bitfusion = get_platform("bitfusion")
+    sess_m = SearchSession(trained, bitfusion, ("error", "speedup"),
+                           mesh=mesh, share_memo=False)
+    sess_s = SearchSession(trained, bitfusion, ("error", "speedup"),
+                           share_memo=False)
     t0 = time.time()
-    res_m = X.run_search(prob_m, **kw)
+    res_m = sess_m.run(**kw)
     t_mesh = time.time() - t0
     t0 = time.time()
-    res_s = X.run_search(prob_s, **kw)
+    res_s = sess_s.run(**kw)
     t_single = time.time() - t0
 
-    key = lambda res: sorted((tuple(i.genome.tolist()),
-                              tuple(i.objectives.tolist()))
-                             for i in res.pareto)
-    assert key(res_m) == key(res_s), "sharded front diverged!"
+    assert res_m.front_key() == res_s.front_key(), "sharded front diverged!"
     print(f"sharded search: {t_mesh:.1f}s over {n_dev} shard(s); "
           f"single-device: {t_single:.1f}s; fronts BIT-IDENTICAL "
           f"({len(res_m.pareto)} solutions, {res_m.n_evals} unique evals)")
-    print(X.format_rows(X.result_table(res_m, trained, with_test=False),
-                        layer_names=trained.cfg.layer_names()))
+    print(res_m.format(with_test=False))
 
 
 def main():

@@ -1,5 +1,13 @@
 """Batched candidate evaluation for the MOHAQ search (GA hot loop).
 
+Model-agnostic since PR 5: ``PopulationEvaluator`` owns the whole batched
+pipeline (subset folding, compile buckets, qp-stack assembly, bank cache,
+mesh sharding, donation, count→error% host math) against any
+``SearchTarget``'s population forward (see ``repro.core.api``);
+``BatchedSRUEvaluator`` is the SRU binding of it. The prose below
+describes the pipeline in terms of the SRU model it was grown on — every
+contract transfers to any lane-independent population forward.
+
 The inference-only search scores each GA candidate with a full quantized
 forward pass; the paper's settings (60 generations x 10 individuals, 40 in
 generation 0) pay for hundreds of *serial* model evaluations. Because every
@@ -104,26 +112,33 @@ def stack_qps(qp_list: Sequence[Dict[str, tuple]],
     return arr
 
 
-class BatchedSRUEvaluator:
-    """Scores whole populations of allocations against the validation
-    subsets with one jitted vmapped forward per subset.
+class PopulationEvaluator:
+    """Model-agnostic population scorer: the generic half of the batched
+    evaluation pipeline, shared by every ``SearchTarget`` implementation
+    (see ``repro.core.api``). A target supplies the model-specific pieces —
+    a population-parameterized forward and (optionally) bank construction —
+    and this class owns everything else: validation-subset folding, compile
+    buckets, qp-stack assembly (menu tables or per-candidate ``make_qp``),
+    the per-parameter-set bank cache, mesh sharding, donation, and the
+    count→max-error% host math.
+
+    ``forward_pop(params, feats, qp_stack, banks)`` -> logits
+    (P, B, T, n_out): the model's population forward. Lanes must be
+    independent in P (required by the mesh sharding and the padding).
 
     ``make_qp``: Alloc -> {layer: 6-float grid} (numpy, per candidate —
     cheap; the jitted forward never recompiles across allocations).
-    Error convention matches ``TrainedSRU.val_error``: per candidate, the
-    MAX frame-error % over the validation subsets (paper §4.2).
+    Error convention matches the scalar path: per candidate, the MAX
+    frame-error % over the validation subsets (paper §4.2).
 
-    ``fused=True`` (default) runs the v2 explicit population-axis forward
-    (direction-fused scans); ``fused=False`` keeps the PR-1 vmap lowering
-    for benchmarking. Both are bit-identical to the scalar path.
-
-    ``make_banks`` (optional): params -> quantized-weight banks
-    (``sru.build_weight_banks`` bound to the trained model's frozen clips
-    and ranges). With ``use_banks=True`` (the default whenever
-    ``make_banks`` is wired and the lowering supports it) the dispatch
-    gathers each lane's weights from the banks instead of requantizing —
-    banks are built once per distinct parameter set and cached, so beacon
-    retrained parameters each get their own bank on first evaluation.
+    ``make_banks`` (optional): params -> quantized-weight banks for
+    ``forward_pop``. With ``use_banks=True`` (the default whenever
+    ``make_banks`` is wired) the dispatch gathers each lane's weights from
+    the banks instead of requantizing — banks are built once per distinct
+    parameter set and cached, so beacon retrained parameters each get
+    their own bank on first evaluation. ``extend_banks(banks, feats)``
+    (optional) post-processes freshly built banks against the folded
+    validation features (the SRU input-layer u-bank hook).
 
     ``mesh`` (optional): a mesh with a "pop" axis shards the population
     across devices — ``partition="shard_map"`` (default, exact per-shard
@@ -132,18 +147,19 @@ class BatchedSRUEvaluator:
     program, so single-device behaviour and error counts are unchanged.
     """
 
-    def __init__(self, cfg, val_subsets, make_qp: Callable[[Alloc], dict],
-                 use_kernel: bool = False, fused: bool = True,
+    def __init__(self, layer_names, val_subsets,
+                 make_qp: Callable[[Alloc], dict],
+                 forward_pop: Callable,
                  mesh=None, partition: str = "shard_map",
                  pop_axis: str = pop_sharding.POP_AXIS,
                  make_banks: Optional[Callable] = None,
                  use_banks: Optional[bool] = None,
-                 qp_tables=None):
+                 qp_tables=None,
+                 extend_banks: Optional[Callable] = None,
+                 menu_bits=None):
         from repro.core import quantization as Q
-        from repro.models import sru
 
-        self.cfg = cfg
-        self.layer_names = list(cfg.layer_names())
+        self.layer_names = list(layer_names)
         self.val_subsets = val_subsets
         self.make_qp = make_qp
         self.mesh = mesh
@@ -152,15 +168,22 @@ class BatchedSRUEvaluator:
         # instead of P x L Python quant_triple calls; rows are bitwise
         # identical, so this is a pure dispatch-overhead cut
         self._qp_tables = qp_tables
-        self._menu_code = {b: k for k, b in enumerate(Q.SUPPORTED_BITS)}
-        if use_banks is None:       # banks need the explicit-population axis
-            use_banks = make_banks is not None and (fused or use_kernel)
+        # ``menu_bits``: the target's menu, in the same order its
+        # qp_menu_tables/banks are built. NOTE: the banked dispatch
+        # recovers bank rows from grid tops via ``Q.menu_index_from_hi``
+        # inside the model forwards, which assumes the full
+        # ``Q.SUPPORTED_BITS`` menu — targets with a reduced/permuted menu
+        # must either keep ``use_banks=False`` or thread their menu
+        # through ``menu_index_from_hi`` as well.
+        self._menu_code = {b: k for k, b in
+                           enumerate(menu_bits or Q.SUPPORTED_BITS)}
+        if use_banks is None:
+            use_banks = make_banks is not None
         if use_banks and make_banks is None:
             raise ValueError("use_banks=True requires make_banks")
-        if use_banks and not (fused or use_kernel):
-            raise ValueError("banks require the fused or kernel lowering")
         self.use_banks = use_banks
         self._make_banks = make_banks
+        self._extend_banks = extend_banks
         # banks keyed by parameter-set identity; the params ref is kept so
         # a collected object's id can never alias a live cache entry
         self._banks: Dict[int, tuple] = {}
@@ -179,15 +202,13 @@ class BatchedSRUEvaluator:
 
         n_sub = len(val_subsets)
 
-        # the per-generation dispatch: bank gather (or requant) -> fused
-        # Bi-SRU scan -> frame-error reduction to integer counts, one jitted
-        # call per (bucket, subset-shape). The qp grid stack is the only
-        # buffer consumed per call, so it is donated where the backend
-        # supports aliasing (not CPU).
+        # the per-generation dispatch: bank gather (or requant) -> model
+        # population forward -> frame-error reduction to integer counts,
+        # one jitted call per (bucket, subset-shape). The qp grid stack is
+        # the only buffer consumed per call, so it is donated where the
+        # backend supports aliasing (not CPU).
         def _batch_err(params, banks, feats, labels, qp_stack):
-            logits = sru.forward_population(params, cfg, feats, qp_stack,
-                                            use_kernel=use_kernel,
-                                            fused=fused, banks=banks)
+            logits = forward_pop(params, feats, qp_stack, banks)
             wrong = jnp.argmax(logits, -1) != labels[None]  # (P, B*, T)
             if self._folded:
                 p, _, t = wrong.shape
@@ -217,20 +238,16 @@ class BatchedSRUEvaluator:
         Keyed by object identity: the GA evaluates thousands of candidates
         against a handful of parameter sets (base + retrained beacons), so
         each set pays one bank build and every later generation gathers.
-        With equal-shaped (folded) subsets the banks are extended with the
-        input-layer u-bank (every (a_bits, w_bits) combination of L0's
-        quantize+MxV precomputed against the frozen validation fold)."""
+        With equal-shaped (folded) subsets the ``extend_banks`` hook (when
+        wired) additionally specializes the fresh banks against the frozen
+        validation fold (the SRU input-layer u-bank)."""
         if not self.use_banks:
             return None
-        from repro.models import sru
         key = id(params)
         if key not in self._banks:
             banks = self._make_banks(params)
-            if (self._folded and self._qp_tables is not None
-                    and self.cfg.input_dim != self.cfg.hidden):
-                banks = sru.extend_banks_u0(banks, self.cfg,
-                                            self._feats_all,
-                                            self._qp_tables[1][0])
+            if self._folded and self._extend_banks is not None:
+                banks = self._extend_banks(banks, self._feats_all)
             self._banks[key] = (params, banks)
         return self._banks[key][1]
 
@@ -277,3 +294,53 @@ class BatchedSRUEvaluator:
             per_subset.append(100.0 * wrong[:p].astype(np.int64)
                               / int(np.asarray(labels).size))
         return np.max(np.stack(per_subset), axis=0).tolist()
+
+
+class BatchedSRUEvaluator(PopulationEvaluator):
+    """SRU binding of the generic ``PopulationEvaluator``: wires
+    ``models.sru.forward_population`` (and the input-layer u-bank hook) into
+    the shared pipeline. Kept under its historical name — every PR-1..4
+    contract (scalar parity, bank parity, mesh parity) is carried by the
+    generic base; this class only selects the SRU lowering.
+
+    ``fused=True`` (default) runs the v2 explicit population-axis forward
+    (direction-fused scans); ``fused=False`` keeps the PR-1 vmap lowering
+    for benchmarking; ``use_kernel=True`` streams the recurrence through
+    the Pallas population kernel. All are bit-identical to the scalar path.
+    Quantized-weight banks need the explicit population axis, so they are
+    only enabled on the fused/kernel lanes.
+    """
+
+    def __init__(self, cfg, val_subsets, make_qp: Callable[[Alloc], dict],
+                 use_kernel: bool = False, fused: bool = True,
+                 mesh=None, partition: str = "shard_map",
+                 pop_axis: str = pop_sharding.POP_AXIS,
+                 make_banks: Optional[Callable] = None,
+                 use_banks: Optional[bool] = None,
+                 qp_tables=None):
+        from repro.models import sru
+
+        self.cfg = cfg
+        if use_banks is None:       # banks need the explicit-population axis
+            use_banks = make_banks is not None and (fused or use_kernel)
+        if use_banks and make_banks is None:
+            raise ValueError("use_banks=True requires make_banks")
+        if use_banks and not (fused or use_kernel):
+            raise ValueError("banks require the fused or kernel lowering")
+
+        def forward_pop(params, feats, qp_stack, banks):
+            return sru.forward_population(params, cfg, feats, qp_stack,
+                                          use_kernel=use_kernel,
+                                          fused=fused, banks=banks)
+
+        extend = None
+        if qp_tables is not None and cfg.input_dim != cfg.hidden:
+            def extend(banks, feats):
+                return sru.extend_banks_u0(banks, cfg, feats,
+                                           qp_tables[1][0])
+
+        super().__init__(list(cfg.layer_names()), val_subsets, make_qp,
+                         forward_pop, mesh=mesh, partition=partition,
+                         pop_axis=pop_axis, make_banks=make_banks,
+                         use_banks=use_banks, qp_tables=qp_tables,
+                         extend_banks=extend)

@@ -58,6 +58,33 @@ class BeaconSearch:
     beacons: List[Beacon] = field(default_factory=list)
     n_retrains: int = 0
 
+    @classmethod
+    def from_target(cls, problem: MOHAQProblem, target, *,
+                    retrain_steps: int = 60, batched: bool = True,
+                    mesh=None, partition: str = "shard_map",
+                    distance_threshold: float = 6.0) -> "BeaconSearch":
+        """Build the beacon wrapper from any ``SearchTarget`` (see
+        ``repro.core.api``): the retrainer comes from
+        ``target.beacon_retrainer(steps)`` (one data stream per search, so
+        successive retrains consume successive batches — bit-identical to
+        the historical experiment wiring) and both error evaluators are
+        the target's parameter-explicit paths. Beacon groups shard
+        independently when a ``mesh`` is given: every grouped call is
+        itself a population partitioned over the mesh."""
+        def error_with_params(params, alloc):
+            return target.val_error(alloc, params=params)
+
+        def batch_error_with_params(params, allocs):
+            return target.val_error_batch(allocs, params=params, mesh=mesh,
+                                          partition=partition)
+
+        return cls(problem=problem, base_params=target.params,
+                   retrain_fn=target.beacon_retrainer(retrain_steps),
+                   error_with_params=error_with_params,
+                   batch_error_with_params=(batch_error_with_params
+                                            if batched else None),
+                   distance_threshold=distance_threshold)
+
     def _route(self, alloc: Alloc,
                base_err: float) -> Tuple[Optional[float], Optional[int]]:
         """Algorithm 1 routing for one candidate, given its base-params

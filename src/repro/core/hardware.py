@@ -125,6 +125,50 @@ SILAGO = SiLago()
 BITFUSION = Bitfusion()
 TPU_V5E = TPUv5e()
 
+
+# ------------------------------------------------------- platform registry
+#
+# Search sessions are constructed from *names* (``SearchSession(target,
+# "bitfusion", ...)``, see repro.core.api) so swapping the hardware platform
+# never requires touching model or search code — the paper's central claim
+# (adapting the search to a platform change) reduced to a config string.
+
+_PLATFORMS: Dict[str, HardwareModel] = {
+    "silago": SILAGO,
+    "bitfusion": BITFUSION,
+    "tpuv5e": TPU_V5E,
+    "tpu_v5e": TPU_V5E,                              # alias
+    # experiment-1 style search: no platform constraints, memory objective
+    # only (sram unbounded; Bitfusion's full menu)
+    "mem-only": Bitfusion(name="none(mem-only)", sram_bytes=None),
+}
+
+
+def _norm(name: str) -> str:
+    return name.lower().replace(" ", "")
+
+
+def list_platforms() -> Tuple[str, ...]:
+    """Registered platform names accepted by ``get_platform``."""
+    return tuple(sorted(_PLATFORMS))
+
+
+def get_platform(name: str) -> HardwareModel:
+    """Resolve a platform name to its ``HardwareModel``. Unknown names raise
+    with the list of valid choices (case-insensitive lookup)."""
+    key = _norm(name)
+    if key not in _PLATFORMS:
+        raise KeyError(f"unknown hardware platform {name!r}; valid choices: "
+                       f"{', '.join(list_platforms())}")
+    return _PLATFORMS[key]
+
+
+def register_platform(name: str, model: HardwareModel) -> None:
+    """Add a platform to the registry (tests / downstream configs); lookup
+    is whitespace-insensitive, so names are stored the same way."""
+    _PLATFORMS[_norm(name)] = model
+
+
 # roofline hardware constants (assignment-specified)
 TPU_PEAK_FLOPS_BF16 = 197e12
 TPU_HBM_BW = 819e9

@@ -4,6 +4,12 @@ Inputs: pre-trained parameters, a hardware model (objective equations +
 constraints), an error evaluator. Output: a Pareto set of per-layer
 (w_bits, a_bits) allocations.
 
+Model-agnostic by construction: a problem sees only layer names, count
+dicts and error callables — never a model object. ``repro.core.api``
+builds problems from any ``SearchTarget`` (``build_problem_from_target``)
+and ``SearchSession`` is the preferred front door; this module stays the
+engine underneath.
+
 Genome encoding follows the paper: precision p in {2,4,8,16} encoded as the
 integer log2(p)-1 in {1,2,3,4}; one gene per layer-weight + one per
 layer-activation (SiLago ties them: one gene per layer).

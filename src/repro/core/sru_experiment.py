@@ -10,6 +10,7 @@ areas, beacon logic, validation-subset max-error trick) follow the paper.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -17,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api
 from repro.core import batched_eval
 from repro.core import quantization as Q
 from repro.core.beacon import BeaconSearch
@@ -37,6 +39,13 @@ FIXED_OPS_PAPER = 88000 + 10704   # element-wise + nonlinear (Table 4)
 
 @dataclass
 class TrainedSRU:
+    """The paper's trained + calibrated Bi-SRU — and the first
+    ``repro.core.api.SearchTarget`` implementation: everything the
+    protocol names (layer geometry, hardware-objective counts, batched
+    error evaluation, qp/menu/bank plumbing, beacon retraining) is served
+    directly off this object, so ``SearchSession(trained, platform,
+    objectives)`` runs the paper's experiments without the historical
+    SRU-specific wiring."""
     cfg: SRUModelConfig
     params: dict
     task: synthetic.SpeechTask
@@ -47,6 +56,8 @@ class TrainedSRU:
     wranges: Dict[str, float]
     baseline_val_error: float
     baseline_test_error: float
+
+    supports_retrain = True            # SearchTarget: beacons available
 
     def __post_init__(self):
         cfg = self.cfg
@@ -68,6 +79,59 @@ class TrainedSRU:
         # (multi-platform sweeps re-hit the same allocations for free);
         # beacon searches attach their own memo — see BeaconSearch.attach
         self.shared_error_memo: Dict[tuple, float] = {}
+
+    # ---- SearchTarget: search-space / hardware-objective surface ----
+
+    @property
+    def layer_names(self) -> Tuple[str, ...]:
+        return tuple(self.cfg.layer_names())
+
+    @property
+    def menu(self) -> Tuple[int, ...]:
+        return Q.SUPPORTED_BITS
+
+    @property
+    def layer_macs(self) -> Dict[str, int]:
+        """MxV MACs per frame == matrix weights per layer (paper Table 4)."""
+        return self.cfg.layer_weight_counts()
+
+    @property
+    def layer_weights(self) -> Dict[str, int]:
+        return self.cfg.layer_weight_counts()
+
+    @property
+    def vector_weights(self) -> int:
+        return self.cfg.vector_weight_count()
+
+    @property
+    def fixed_ops(self) -> int:
+        """Element-wise + sigmoid op count per frame (runs at max precision;
+        folded into the speedup normalization, Eq. 4)."""
+        return 14 * self.cfg.hidden * 2 * self.cfg.n_sru_layers * 2
+
+    def beacon_retrainer(self, retrain_steps: int = 60):
+        """One retraining context per search: the returned
+        ``retrain_fn(alloc, base_params)`` draws successive batches from a
+        single seeded stream, so the k-th retrain of any search sees the
+        identical data regardless of which alloc triggered it — the exact
+        historical experiment-3 wiring."""
+        data = synthetic.speech_batches(self.task, 8, 48, seed=3)
+
+        def retrain_fn(alloc: Alloc, base_params):
+            wclips = {n: self.wclips[(n, a[0])]
+                      for n, a in alloc.items() if a[0] != 16}
+            return qat.retrain_sru(base_params, self.cfg, alloc, data,
+                                   steps=retrain_steps,
+                                   act_ranges=self.act_ranges,
+                                   wclips=wclips)
+        return retrain_fn
+
+    def retrain(self, alloc: Alloc, base_params=None, *, steps: int = 60):
+        """One-off binary-connect retrain under ``alloc`` (fresh stream)."""
+        base = self.params if base_params is None else base_params
+        return self.beacon_retrainer(steps)(alloc, base)
+
+    # ---- SearchTarget: quantization-grid plumbing ----
 
     def qp_for(self, alloc: Alloc):
         return sru.quant_triples_for(alloc, self.wclips, self.act_ranges,
@@ -223,53 +287,47 @@ def train_small_sru(steps: int = 400, *, cfg: SRUModelConfig = SEARCH_CFG,
 
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} (repro.core.api)",
+                  DeprecationWarning, stacklevel=3)
+
+
 def build_problem(trained: TrainedSRU, hardware: HardwareModel,
                   objectives, *, use_search_cfg_sizes: bool = True,
                   sram_override: Optional[int] = None,
                   batched: bool = True, mesh=None,
                   partition: str = "shard_map") -> MOHAQProblem:
-    """``mesh`` (a 1-D "pop" device mesh) shards every population-level
-    error evaluation across devices; scalar fallbacks and the bit-identical
+    """Deprecated shim over ``api.build_problem_from_target`` (exact
+    delegation — same problem wiring, same shared error memo). ``mesh``
+    (a 1-D "pop" device mesh) shards every population-level error
+    evaluation across devices; scalar fallbacks and the bit-identical
     Pareto-front contract are unchanged."""
-    cfg = trained.cfg
-    macs = cfg.layer_weight_counts()
-    hw = hardware
-    if sram_override is not None:
-        hw = dataclasses.replace(hardware, sram_bytes=sram_override)
-
-    def error_fn(alloc: Alloc) -> float:
-        return trained.val_error(alloc)
-
-    def batch_error_fn(allocs):
-        return trained.val_error_batch(allocs, mesh=mesh,
-                                       partition=partition)
-
-    fixed = 14 * cfg.hidden * 2 * cfg.n_sru_layers * 2  # elementwise ops
-    return MOHAQProblem(
-        layer_names=list(LAYER_NAMES), layer_macs=macs, layer_weights=macs,
-        vector_weights=cfg.vector_weight_count(), hardware=hw,
-        error_fn=error_fn, baseline_error=trained.baseline_val_error,
-        batch_error_fn=batch_error_fn if batched else None,
-        fixed_ops=fixed, objectives=objectives,
-        # base-params errors depend only on the allocation: share the memo
-        # across every search built from this trained model (platform sweeps
-        # score each allocation once). Beacon searches re-point this.
-        error_memo=trained.shared_error_memo)
+    _deprecated("build_problem", "SearchSession(target, platform, "
+                "objectives).build_problem()")
+    return api.build_problem_from_target(
+        trained, hardware, objectives, sram_override=sram_override,
+        batched=batched, mesh=mesh, partition=partition)
 
 
 # ------------------------------------------------------------- experiments
+#
+# The paper's three experiments are now thin deprecation shims over
+# ``api.SearchSession`` — each keeps its historical signature, SRAM
+# scaling and return type, and delegates the search itself.
 
 def experiment1_memory(trained: TrainedSRU, *, generations=15, pop=10,
                        initial=24, seed=0, log=None,
                        batched: bool = True, mesh=None,
                        partition: str = "shard_map") -> MOHAQResult:
-    """Paper §5.2: minimize (WER, memory); no hardware platform."""
-    mem_only = dataclasses.replace(BITFUSION, sram_bytes=None,
-                                   name="none(mem-only)")
-    prob = build_problem(trained, mem_only, ("error", "memory"),
-                         batched=batched, mesh=mesh, partition=partition)
-    return run_search(prob, n_generations=generations, pop_size=pop,
-                      initial_pop_size=initial, seed=seed, log=log)
+    """Paper §5.2: minimize (WER, memory); no hardware platform.
+    Deprecated shim: ``SearchSession(trained, "mem-only",
+    ("error", "memory")).run(...)``."""
+    _deprecated("experiment1_memory",
+                'SearchSession(target, "mem-only", ("error", "memory"))')
+    sess = api.SearchSession(trained, "mem-only", ("error", "memory"),
+                             batched=batched, mesh=mesh, partition=partition)
+    return sess.run(generations=generations, pop=pop, initial=initial,
+                    seed=seed, log=log).result
 
 
 def experiment2_silago(trained: TrainedSRU, *, generations=15, pop=10,
@@ -277,13 +335,18 @@ def experiment2_silago(trained: TrainedSRU, *, generations=15, pop=10,
                        batched: bool = True, mesh=None,
                        partition: str = "shard_map") -> MOHAQResult:
     """Paper §5.3: SiLago, 3 objectives (WER, speedup, energy), 6MB-equiv
-    SRAM constraint (scaled to the search model: 3.5x compression bound)."""
-    sram = int(trained.cfg.total_weights() * 32 / 8 / 3.5)
-    prob = build_problem(trained, SILAGO, ("error", "speedup", "energy"),
-                         sram_override=sram, batched=batched, mesh=mesh,
-                         partition=partition)
-    return run_search(prob, n_generations=generations, pop_size=pop,
-                      initial_pop_size=initial, seed=seed, log=log)
+    SRAM constraint (scaled to the search model: 3.5x compression bound).
+    Deprecated shim over ``SearchSession``."""
+    _deprecated("experiment2_silago",
+                'SearchSession(target, "silago", ..., sram_override=...)')
+    total = sum(trained.layer_weights.values()) + trained.vector_weights
+    sram = int(total * 32 / 8 / 3.5)
+    sess = api.SearchSession(trained, "silago",
+                             ("error", "speedup", "energy"),
+                             sram_override=sram, batched=batched, mesh=mesh,
+                             partition=partition)
+    return sess.run(generations=generations, pop=pop, initial=initial,
+                    seed=seed, log=log).result
 
 
 def experiment3_bitfusion(trained: TrainedSRU, *, generations=15, pop=10,
@@ -295,64 +358,29 @@ def experiment3_bitfusion(trained: TrainedSRU, *, generations=15, pop=10,
     inference-only then beacon-based. The paper's 10.6x bound is scaled to
     this model's weight mix: the 16-bit vectors are 2.2% of the search model
     (vs 0.3% of the paper model), so the equivalent "high compression"
-    scenario allows ~3.2-bit average matrices + 16-bit vectors."""
-    mat = sum(trained.cfg.layer_weight_counts().values())
-    vec = trained.cfg.vector_weight_count()
+    scenario allows ~3.2-bit average matrices + 16-bit vectors.
+    Deprecated shim over ``SearchSession(..., beacons=...)``."""
+    _deprecated("experiment3_bitfusion",
+                'SearchSession(target, "bitfusion", ...).run(beacons=True)')
+    mat = sum(trained.layer_weights.values())
+    vec = trained.vector_weights
     sram = int((mat * 3.5 + vec * 16) / 8)
-    prob = build_problem(trained, BITFUSION, ("error", "speedup"),
-                         sram_override=sram, batched=batched, mesh=mesh,
-                         partition=partition)
-    bs = None
-    if beacon:
-        data = synthetic.speech_batches(trained.task, 8, 48, seed=3)
-
-        def retrain_fn(alloc, base_params):
-            wclips = {n: trained.wclips[(n, a[0])]
-                      for n, a in alloc.items() if a[0] != 16}
-            return qat.retrain_sru(base_params, trained.cfg, alloc, data,
-                                   steps=retrain_steps,
-                                   act_ranges=trained.act_ranges,
-                                   wclips=wclips)
-
-        def error_with_params(params, alloc):
-            return trained.val_error(alloc, params=params)
-
-        def batch_error_with_params(params, allocs):
-            # beacon groups shard independently: every grouped call is
-            # itself a population partitioned over the mesh
-            return trained.val_error_batch(allocs, params=params, mesh=mesh,
-                                           partition=partition)
-
-        bs = BeaconSearch(problem=prob, base_params=trained.params,
-                          retrain_fn=retrain_fn,
-                          error_with_params=error_with_params,
-                          batch_error_with_params=(
-                              batch_error_with_params if batched else None),
-                          distance_threshold=6.0)
-        prob = bs.attach()
-    res = run_search(prob, n_generations=generations, pop_size=pop,
-                     initial_pop_size=initial, seed=seed, log=log)
-    return res, bs
+    sess = api.SearchSession(trained, "bitfusion", ("error", "speedup"),
+                             sram_override=sram, batched=batched, mesh=mesh,
+                             partition=partition)
+    sr = sess.run(generations=generations, pop=pop, initial=initial,
+                  seed=seed, log=log, beacons=beacon,
+                  retrain_steps=retrain_steps)
+    return sr.result, sr.beacon_search
 
 
 def result_table(res: MOHAQResult, trained: TrainedSRU,
                  with_test: bool = True) -> List[dict]:
-    rows = []
-    for row in res.rows():
-        if with_test:
-            row["test_error"] = trained.test_error(row["alloc"])
-        rows.append(row)
-    return rows
+    return api.result_table(res, trained, with_test=with_test)
 
 
-def format_rows(rows: List[dict], layer_names=LAYER_NAMES) -> str:
-    out = ["sol  " + " ".join(f"{n:>6s}" for n in layer_names)
-           + "   err%  Cp_r  speedup  energy(uJ)  test%"]
-    for i, r in enumerate(rows):
-        bits = " ".join(f"{r['alloc'][n][0]}/{r['alloc'][n][1]:<3d}"
-                        for n in layer_names)
-        out.append(
-            f"S{i+1:<3d} {bits}  {r['error']:5.1f} {r['compression']:5.1f} "
-            f"{r['speedup']:7.1f}  {r['energy']*1e6:9.3f}  "
-            f"{r.get('test_error', float('nan')):5.1f}")
-    return "\n".join(out)
+def format_rows(rows: List[dict], layer_names=None) -> str:
+    """Layer names now come from the rows' allocations (i.e. from the
+    target that produced them) instead of the hard-coded SRU
+    ``LAYER_NAMES`` — tables render correctly for any architecture."""
+    return api.format_rows(rows, layer_names=layer_names)

@@ -1,9 +1,12 @@
 """Population-axis sharding for MOHAQ candidate evaluation.
 
-The GA search scores whole populations per generation through
-``models.sru.forward_population`` — a (P, ...) batch whose lanes are
-completely independent (one quantization candidate per lane, no cross-lane
-reduction anywhere in the forward or the error count). That independence
+The GA search scores whole populations per generation through a
+``SearchTarget``'s population forward (``repro.core.api``; e.g.
+``models.sru.forward_population`` or the xLSTM target's vmapped lane) — a
+(P, ...) batch whose lanes are completely independent (one quantization
+candidate per lane, no cross-lane reduction anywhere in the forward or
+the error count). Nothing here is model-specific: any lane-independent
+``fn(*replicated, batched)`` partitions the same way. That independence
 makes the population axis trivially data-parallel: partition P across a
 1-D device mesh, replicate everything else (parameters, the precomputed
 quantized-weight banks, validation features/labels, and the

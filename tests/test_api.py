@@ -1,0 +1,306 @@
+"""SearchTarget protocol + SearchSession facade (repro.core.api).
+
+Contract coverage:
+  (a) ``SearchSession`` over the TrainedSRU adapter reproduces the
+      pre-refactor ``experiment1-3`` wiring bit-identically — the legacy
+      problem construction is replicated verbatim in ``_legacy_problem`` /
+      ``_legacy_beacon`` below (the exact code the old
+      ``sru_experiment.build_problem``/``experiment3_bitfusion`` ran) and
+      compared front-for-front against the session, including the
+      beacon-grouped and 1-device-mesh paths;
+  (b) the second architecture (registry xLSTM) runs a small end-to-end
+      search with a non-trivial front through the same engine;
+  (c) the deprecation shims warn and delegate exactly;
+  plus the platform registry, target-derived table rendering, and the
+  session-level determinism / no-global-RNG invariant.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core import sru_experiment as X
+from repro.core import xlstm_target as XT
+from repro.core.beacon import BeaconSearch
+from repro.core.hardware import (BITFUSION, SILAGO, HardwareModel,
+                                 get_platform, list_platforms)
+from repro.core.mohaq import MOHAQProblem, run_search
+from repro.data import synthetic
+from repro.training import qat
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return X.train_small_sru(steps=60)
+
+
+@pytest.fixture(scope="module")
+def xlstm():
+    return XT.train_small_xlstm(steps=100)
+
+
+def front_key(res):
+    """Canonical front comparison key (genome, objectives, violation)."""
+    pareto = res.pareto if hasattr(res, "pareto") else res
+    return sorted((tuple(i.genome.tolist()), tuple(i.objectives.tolist()),
+                   float(i.violation)) for i in pareto)
+
+
+# ------------------------------------------------- pre-refactor replicas
+
+def _legacy_problem(trained, hardware, objectives, *, sram_override=None,
+                    batched=True, mesh=None):
+    """The problem construction exactly as the pre-API
+    ``sru_experiment.build_problem`` wrote it (hard-coded LAYER_NAMES,
+    SRU-config fixed ops, closures over the trained model)."""
+    from repro.models.sru import LAYER_NAMES
+    cfg = trained.cfg
+    macs = cfg.layer_weight_counts()
+    hw = hardware
+    if sram_override is not None:
+        hw = dataclasses.replace(hardware, sram_bytes=sram_override)
+    fixed = 14 * cfg.hidden * 2 * cfg.n_sru_layers * 2
+    return MOHAQProblem(
+        layer_names=list(LAYER_NAMES), layer_macs=macs, layer_weights=macs,
+        vector_weights=cfg.vector_weight_count(), hardware=hw,
+        error_fn=lambda a: trained.val_error(a),
+        baseline_error=trained.baseline_val_error,
+        batch_error_fn=((lambda allocs: trained.val_error_batch(
+            allocs, mesh=mesh)) if batched else None),
+        fixed_ops=fixed, objectives=objectives, error_memo={})
+
+
+def _legacy_beacon(trained, prob, retrain_steps, batched=True):
+    """The beacon wiring exactly as the pre-API ``experiment3_bitfusion``
+    wrote it (one seed-3 data stream per search)."""
+    data = synthetic.speech_batches(trained.task, 8, 48, seed=3)
+
+    def retrain_fn(alloc, base_params):
+        wclips = {n: trained.wclips[(n, a[0])]
+                  for n, a in alloc.items() if a[0] != 16}
+        return qat.retrain_sru(base_params, trained.cfg, alloc, data,
+                               steps=retrain_steps,
+                               act_ranges=trained.act_ranges, wclips=wclips)
+
+    bs = BeaconSearch(
+        problem=prob, base_params=trained.params, retrain_fn=retrain_fn,
+        error_with_params=lambda p, a: trained.val_error(a, params=p),
+        batch_error_with_params=((lambda p, al: trained.val_error_batch(
+            al, params=p)) if batched else None),
+        distance_threshold=6.0)
+    return bs, bs.attach()
+
+
+# --------------------------------------------------------------- protocol
+
+class TestProtocol:
+    def test_trained_sru_is_a_search_target(self, trained):
+        assert isinstance(trained, api.SearchTarget)
+        assert list(trained.layer_names) == list(trained.cfg.layer_names())
+        assert trained.menu == (2, 4, 8, 16)
+        assert trained.layer_macs == trained.cfg.layer_weight_counts()
+        assert trained.vector_weights == trained.cfg.vector_weight_count()
+        assert trained.fixed_ops > 0
+        assert trained.supports_retrain
+
+    def test_xlstm_is_a_search_target(self, xlstm):
+        assert isinstance(xlstm, api.SearchTarget)
+        G = xlstm.cfg.n_layers // 2
+        assert len(xlstm.layer_names) == 2 * G + 1
+        assert xlstm.layer_names[-1] == "head"
+        assert all(n > 0 for n in xlstm.layer_weights.values())
+        assert xlstm.vector_weights > 0
+        assert not xlstm.supports_retrain
+
+    def test_non_target_rejected(self):
+        assert not isinstance(object(), api.SearchTarget)
+
+
+class TestPlatformRegistry:
+    def test_known_platforms(self):
+        assert get_platform("silago") is SILAGO
+        assert get_platform("bitfusion") is BITFUSION
+        assert get_platform("SiLago") is SILAGO          # case-insensitive
+        assert get_platform("tpuv5e").name == "tpu_v5e"
+        mem = get_platform("mem-only")
+        assert mem.sram_bytes is None
+        assert isinstance(mem, HardwareModel)
+
+    def test_unknown_platform_lists_choices(self):
+        with pytest.raises(KeyError, match="silago"):
+            get_platform("gpu9000")
+        assert {"silago", "bitfusion", "tpuv5e",
+                "mem-only"} <= set(list_platforms())
+
+    def test_session_resolves_platform_names(self, trained):
+        sess = api.SearchSession(trained, "silago",
+                                 ("error", "speedup", "energy"))
+        assert sess.platform is SILAGO
+
+
+# -------------------------------------- (a) bit-identical session fronts
+
+class TestSessionBitIdentical:
+    KW = dict(n_generations=3, pop_size=6, initial_pop_size=10, seed=3)
+    RUN = dict(generations=3, pop=6, initial=10, seed=3)
+
+    def test_experiment1_front(self, trained):
+        mem_only = dataclasses.replace(BITFUSION, sram_bytes=None,
+                                       name="none(mem-only)")
+        legacy = run_search(_legacy_problem(trained, mem_only,
+                                            ("error", "memory")), **self.KW)
+        sess = api.SearchSession(trained, "mem-only", ("error", "memory"),
+                                 share_memo=False).run(**self.RUN)
+        assert front_key(sess) == front_key(legacy)
+        assert sess.n_evals == legacy.n_evals
+
+    def test_experiment2_front(self, trained):
+        sram = int(trained.cfg.total_weights() * 32 / 8 / 3.5)
+        legacy = run_search(_legacy_problem(
+            trained, SILAGO, ("error", "speedup", "energy"),
+            sram_override=sram), **self.KW)
+        sess = api.SearchSession(trained, "silago",
+                                 ("error", "speedup", "energy"),
+                                 sram_override=sram,
+                                 share_memo=False).run(**self.RUN)
+        assert front_key(sess) == front_key(legacy)
+
+    def test_experiment3_beacon_front(self, trained):
+        """The retraining-aware path: identical retrain count, beacon set
+        and front through the session facade (beacon-grouped batched
+        evaluation on both sides)."""
+        mat = sum(trained.cfg.layer_weight_counts().values())
+        vec = trained.cfg.vector_weight_count()
+        sram = int((mat * 3.5 + vec * 16) / 8)
+        kw = dict(n_generations=2, pop_size=6, initial_pop_size=8, seed=0)
+        prob = _legacy_problem(trained, BITFUSION, ("error", "speedup"),
+                               sram_override=sram)
+        bs_legacy, prob = _legacy_beacon(trained, prob, retrain_steps=3)
+        legacy = run_search(prob, **kw)
+        sess = api.SearchSession(trained, "bitfusion", ("error", "speedup"),
+                                 sram_override=sram, share_memo=False).run(
+            generations=2, pop=6, initial=8, seed=0,
+            beacons=True, retrain_steps=3)
+        assert front_key(sess) == front_key(legacy)
+        assert sess.beacon_search.n_retrains == bs_legacy.n_retrains
+        assert len(sess.beacon_search.beacons) == len(bs_legacy.beacons)
+
+    def test_mesh_1dev_front(self, trained):
+        """The sharded-evaluator path through the session (1-device mesh —
+        the in-process fast-lane cut; the 8-way host mesh is covered by
+        tests/test_sharded_eval.py)."""
+        from repro.launch.mesh import make_population_mesh
+        mesh = make_population_mesh(1)
+        kw = dict(generations=2, pop=6, initial=8, seed=1)
+        plain = api.SearchSession(trained, "bitfusion",
+                                  ("error", "speedup"),
+                                  share_memo=False).run(**kw)
+        sharded = api.SearchSession(trained, "bitfusion",
+                                    ("error", "speedup"), mesh=mesh,
+                                    share_memo=False).run(**kw)
+        assert front_key(sharded) == front_key(plain)
+
+
+# --------------------------------------------------- (c) deprecation shims
+
+class TestDeprecationShims:
+    def test_build_problem_warns_and_delegates(self, trained):
+        with pytest.warns(DeprecationWarning, match="build_problem"):
+            old = X.build_problem(trained, BITFUSION, ("error", "speedup"))
+        new = api.build_problem_from_target(trained, BITFUSION,
+                                            ("error", "speedup"))
+        rng = np.random.default_rng(4)
+        for _ in range(3):
+            g = rng.integers(1, 5, old.n_var)
+            o_objs, o_v = old.evaluate(g.copy())
+            n_objs, n_v = new.evaluate(g.copy())
+            assert list(o_objs) == list(n_objs) and o_v == n_v
+        # both share the target's cross-search memo (one error eval total)
+        assert old.error_memo is trained.shared_error_memo
+        assert new.error_memo is trained.shared_error_memo
+
+    def test_experiment_shims_warn_and_delegate(self, trained):
+        kw = dict(generations=2, pop=6, initial=8, seed=5)
+        with pytest.warns(DeprecationWarning, match="experiment1_memory"):
+            old = X.experiment1_memory(trained, **kw)
+        new = api.SearchSession(trained, "mem-only",
+                                ("error", "memory")).run(
+            generations=2, pop=6, initial=8, seed=5)
+        assert front_key(old) == front_key(new)
+        assert old.n_evals == new.n_evals
+
+    def test_experiment3_shim_returns_pair(self, trained):
+        with pytest.warns(DeprecationWarning, match="experiment3_bitfusion"):
+            res, bs = X.experiment3_bitfusion(trained, generations=1, pop=4,
+                                              initial=6, seed=2)
+        assert bs is None
+        assert len(res.pareto) >= 1
+
+
+# ------------------------------------- (b) second architecture end to end
+
+class TestXLSTMEndToEnd:
+    def test_search_produces_nontrivial_front(self, xlstm):
+        sess = api.SearchSession(xlstm, "bitfusion", ("error", "speedup"))
+        res = sess.run(generations=3, pop=6, initial=10, seed=0)
+        assert len(res.pareto) >= 2, "expected a real trade-off front"
+        objs = {tuple(i.objectives.tolist()) for i in res.pareto}
+        assert len(objs) >= 2, "front points must trade off differently"
+        assert all(np.isfinite(i.objectives).all() for i in res.pareto)
+        # rows decode to xlstm layer allocations
+        for row in res.rows():
+            assert set(row["alloc"]) == set(xlstm.layer_names)
+
+    def test_bank_gather_matches_requant(self, xlstm):
+        rng = np.random.default_rng(8)
+        menu = list(xlstm.menu)
+        allocs = [{n: (menu[rng.integers(len(menu))],
+                       menu[rng.integers(len(menu))])
+                   for n in xlstm.layer_names} for _ in range(5)]
+        banked = xlstm.val_error_batch(allocs)
+        requant = xlstm.val_error_batch(allocs, use_banks=False)
+        assert banked == requant
+
+    def test_beacons_rejected_without_retrain_support(self, xlstm):
+        sess = api.SearchSession(xlstm, "bitfusion", ("error", "speedup"))
+        with pytest.raises(NotImplementedError, match="retrain"):
+            sess.run(generations=1, pop=4, initial=4, beacons=True)
+
+    def test_determinism_and_no_global_rng(self, xlstm):
+        """Same-seed sessions return identical fronts, and no stochastic
+        site of the new target leans on np.random global state (ROADMAP
+        invariant — everything flows through SeedSequence / jax PRNG)."""
+        state_before = np.random.get_state()
+        kw = dict(generations=2, pop=6, initial=8, seed=9)
+        r1 = api.SearchSession(xlstm, "mem-only", ("error", "memory"),
+                               share_memo=False).run(**kw)
+        r2 = api.SearchSession(xlstm, "mem-only", ("error", "memory"),
+                               share_memo=False).run(**kw)
+        assert front_key(r1) == front_key(r2)
+        state_after = np.random.get_state()
+        assert state_before[0] == state_after[0]
+        assert np.array_equal(state_before[1], state_after[1])
+        assert state_before[2:] == state_after[2:]
+
+
+# ------------------------------------------------- target-driven rendering
+
+class TestResultRendering:
+    def test_format_uses_target_layer_names(self, xlstm):
+        res = api.SearchSession(xlstm, "mem-only", ("error", "memory")).run(
+            generations=1, pop=4, initial=6, seed=0)
+        txt = res.format(with_test=False)
+        for name in xlstm.layer_names:
+            assert name in txt.splitlines()[0]
+
+    def test_format_rows_infers_layer_names(self, xlstm):
+        """The sru_experiment helpers no longer hard-code LAYER_NAMES:
+        xlstm rows render through them unchanged."""
+        res = api.SearchSession(xlstm, "mem-only", ("error", "memory")).run(
+            generations=1, pop=4, initial=6, seed=0)
+        rows = X.result_table(res.result, xlstm, with_test=False)
+        txt = X.format_rows(rows)
+        assert "m0" in txt and "head" in txt
+        assert len(txt.splitlines()) == len(rows) + 1

@@ -9,7 +9,11 @@
 #   3. benchmarks  — the --quick benchmark lane: paper tables, kernels,
 #                    search-throughput regression gate, sharded rows
 #
-# Usage: tools/check.sh [fast|slow|bench]   (no argument = all three)
+#   0. api smoke   — import + public-name check of the repro.core.api
+#                    SearchTarget/SearchSession surface and the platform
+#                    registry (runs before the fast lane)
+#
+# Usage: tools/check.sh [api|fast|slow|bench]   (no argument = all stages)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -29,6 +33,28 @@ fi
 
 stage="${1:-all}"
 
+run_api_smoke() {
+  echo "== api surface smoke: repro.core.api public names =="
+  python - <<'PY'
+import repro.core.api as api
+
+required = ["SearchTarget", "SearchSession", "SearchResult",
+            "build_problem_from_target", "result_table", "format_rows",
+            "get_platform", "list_platforms"]
+missing = [n for n in required if not hasattr(api, n)]
+assert not missing, f"api surface regressed, missing: {missing}"
+assert sorted(api.__all__) == sorted(required), \
+    f"__all__ drifted: {sorted(api.__all__)}"
+from repro.core.hardware import get_platform, list_platforms
+for name in ("silago", "bitfusion", "tpuv5e", "mem-only"):
+    assert name in list_platforms(), name
+    get_platform(name)
+from repro.core.batched_eval import BatchedSRUEvaluator, PopulationEvaluator
+assert issubclass(BatchedSRUEvaluator, PopulationEvaluator)
+print("api surface OK:", ", ".join(sorted(api.__all__)))
+PY
+}
+
 run_fast() {
   echo "== fast lane: pytest -m 'not slow' =="
   python -m pytest -x -q -m "not slow"
@@ -46,10 +72,11 @@ run_bench() {
 }
 
 case "$stage" in
-  fast)  run_fast ;;
+  api)   run_api_smoke ;;
+  fast)  run_api_smoke; run_fast ;;
   slow)  run_slow ;;
   bench) run_bench ;;
-  all)   run_fast; run_slow; run_bench ;;
-  *)     echo "unknown stage: $stage (want fast|slow|bench)" >&2; exit 2 ;;
+  all)   run_api_smoke; run_fast; run_slow; run_bench ;;
+  *)     echo "unknown stage: $stage (want api|fast|slow|bench)" >&2; exit 2 ;;
 esac
 echo "== check.sh: all requested stages passed =="
