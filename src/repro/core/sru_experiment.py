@@ -384,3 +384,39 @@ def format_rows(rows: List[dict], layer_names=None) -> str:
     target that produced them) instead of the hard-coded SRU
     ``LAYER_NAMES`` — tables render correctly for any architecture."""
     return api.format_rows(rows, layer_names=layer_names)
+
+
+def sru_contract_harness():
+    """Tiny-but-real SRU instance for the jaxpr contract checker (see
+    ``repro.core.target_registry``). Every dimension is chosen to avoid the
+    checker's activation marker dim (T=3): hidden=6 (bi-state 12), proj=4,
+    input 5, outputs 7, two layers — so a ``round`` op whose shapes carry a
+    3 can only be an activation fake-quant, and one that doesn't is a
+    weight (re)quantization the banked lane must not contain."""
+    from repro.core.target_registry import ContractHarness, MARKER_DIM
+
+    cfg = SRUModelConfig(name="sru_contract", input_dim=5, hidden=6,
+                         proj=4, n_sru_layers=2, n_outputs=7)
+    params = sru.init_params(jax.random.PRNGKey(0), cfg)
+    B, T = 2, MARKER_DIM
+    feats = jnp.asarray(np.linspace(-1.0, 1.0, B * T * cfg.input_dim,
+                                    dtype=np.float32
+                                    ).reshape(B, T, cfg.input_dim))
+    labels = jnp.zeros((B, T), jnp.int32)
+    names = list(cfg.layer_names())
+    act_ranges = {n: 1.0 for n in names}
+    wclips = {(n, b): 0.5 for n in names for b in (2, 4, 8)}
+    wranges = {n: 1.0 for n in names}
+    trained = TrainedSRU(cfg, params, None, [(feats, labels)] * 4,
+                         [(feats, labels)], act_ranges, wclips, wranges,
+                         0.0, 0.0)
+
+    def forward_pop(params, feats, qp_stack, banks=None):
+        return sru.forward_population(params, cfg, feats, qp_stack,
+                                      fused=True, banks=banks)
+
+    return ContractHarness(
+        name="sru", target=trained, feats=feats, labels=labels,
+        layer_names=tuple(names), marker_dim=T,
+        anchor_path="src/repro/models/sru.py", forward_pop=forward_pop,
+        make_evaluator=lambda: trained.batched_evaluator(use_banks=True))

@@ -408,3 +408,40 @@ def train_small_xlstm(steps: int = 120, *, cfg: Optional[ArchConfig] = None,
     target.baseline_val_error = target.val_error()
     target.baseline_test_error = target.test_error()
     return target
+
+
+def xlstm_contract_harness():
+    """Tiny-but-real xLSTM instance for the jaxpr contract checker (see
+    ``repro.core.target_registry``). The reduced registry config shrunk to
+    two blocks / d_model 16 keeps every model dimension off the checker's
+    activation marker dim (T=3), so marker-carrying ``round`` ops are
+    activation fake-quants and any non-marker round is a weight requantize
+    the banked lane must not contain."""
+    from repro.core.target_registry import ContractHarness, MARKER_DIM
+
+    cfg = dataclasses.replace(get_config("xlstm-350m").reduced(),
+                              name="xlstm_contract", n_layers=2,
+                              d_model=16, n_heads=2, vocab_size=32)
+    model = registry.get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, MARKER_DIM
+    toks = jnp.asarray((np.arange(B * T).reshape(B, T)
+                        % cfg.vocab_size).astype(np.int32))
+    labels = toks
+    names = quant_layer_names(cfg)
+    act_ranges = {n: 1.0 for n in names}
+    wclips = {(n, b): 0.5 for n in names for b in (2, 4, 8)}
+    wranges = {n: 1.0 for n in names}
+    target = XLSTMTarget(cfg, params, [(toks, labels)] * 4,
+                         [(toks, labels)], act_ranges, wclips, wranges)
+
+    def forward_pop(params, feats, qp_stack, banks=None):
+        return forward_population(params, cfg, feats, qp_stack,
+                                  banks=banks)
+
+    return ContractHarness(
+        name="xlstm", target=target, feats=toks, labels=labels,
+        layer_names=names, marker_dim=T,
+        anchor_path="src/repro/core/xlstm_target.py",
+        forward_pop=forward_pop,
+        make_evaluator=lambda: target.batched_evaluator(use_banks=True))

@@ -1,0 +1,364 @@
+"""Tests for the repro-analyze static-analysis gate (tools/analysis).
+
+Layer 1: per-rule positive + negative fixtures through ``analyze_source``
+(the fixture's fake path opts it into path-scoped rules). Layer 2: the
+jaxpr contract checker against the real SRU harness, plus a deliberately
+re-quantizing "banked" forward that C1 must reject. Baseline: round-trip
+(finding -> write baseline -> gate clean) and the justification
+requirement.
+"""
+import json
+import textwrap
+
+import pytest
+
+from tools.analysis import baseline as bl
+from tools.analysis.core import analyze_source
+
+CORE_PATH = "src/repro/core/fixture.py"     # in scope for R1/R2
+MODEL_PATH = "src/repro/models/sru.py"      # parity-frozen, in scope for R5
+PLAIN_PATH = "src/repro/other/fixture.py"   # out of R1/R5 scope
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+def _analyze(src, path=CORE_PATH):
+    return analyze_source(textwrap.dedent(src), path)
+
+
+# --------------------------------------------------------------- R1
+
+def test_r1_flags_global_rng_in_core():
+    out = _analyze("""
+        import numpy as np
+        def sample():
+            return np.random.rand(3)
+    """)
+    assert _rules(out) == ["R1"]
+    assert "np.random.rand" in out[0].message
+    assert out[0].path == CORE_PATH and out[0].line == 4
+
+
+def test_r1_flags_bare_stdlib_random():
+    out = _analyze("""
+        import random
+        x = random.randint(0, 4)
+    """)
+    assert _rules(out) == ["R1"]
+
+
+def test_r1_allows_seedsequence_idiom():
+    out = _analyze("""
+        import numpy as np
+        ss = np.random.SeedSequence(0)
+        rng = np.random.default_rng(ss)
+        gen = np.random.Generator(np.random.PCG64(ss))
+    """)
+    assert out == []
+
+
+def test_r1_out_of_scope_module_not_flagged():
+    out = _analyze("""
+        import numpy as np
+        x = np.random.rand(3)
+    """, path=PLAIN_PATH)
+    assert out == []
+
+
+def test_r1_searchtarget_module_in_scope_anywhere():
+    out = _analyze("""
+        import numpy as np
+        class MambaTarget:
+            supports_retrain = False
+            def noise(self):
+                return np.random.rand(2)
+    """, path="src/repro/future/mamba_target.py")
+    assert _rules(out) == ["R1"]
+
+
+# --------------------------------------------------------------- R2
+
+def test_r2_flags_deprecated_calls_by_alias_and_name():
+    out = _analyze("""
+        from repro.core import sru_experiment as X
+        from repro.core.sru_experiment import build_problem
+        p1 = X.experiment1_memory(None)
+        p2 = build_problem(None, None, ())
+    """, path="benchmarks/fixture.py")
+    assert _rules(out) == ["R2", "R2"]
+    assert "experiment1_memory" in out[0].message
+
+
+def test_r2_exempts_shim_module_and_tests():
+    src = """
+        from repro.core import sru_experiment as X
+        p = X.build_problem(None, None, ())
+    """
+    assert _analyze(src, path="src/repro/core/sru_experiment.py") == []
+    assert _analyze(src, path="tests/test_sru_experiment.py") == []
+
+
+def test_r2_ignores_unrelated_build_problem_methods():
+    out = _analyze("""
+        class SearchSession:
+            def build_problem(self):
+                return None
+        s = SearchSession()
+        p = s.build_problem()
+    """, path="benchmarks/fixture.py")
+    assert out == []
+
+
+# --------------------------------------------------------------- R3
+
+def test_r3_flags_host_effects_in_jitted_fn():
+    out = _analyze("""
+        import jax
+        import numpy as np
+        @jax.jit
+        def step(x):
+            print("tracing", x)
+            y = np.asarray(x)
+            return y.sum().item()
+    """, path=PLAIN_PATH)
+    assert sorted(_rules(out)) == ["R3", "R3", "R3"]
+    msgs = " | ".join(f.message for f in out)
+    assert "print()" in msgs and "np.asarray" in msgs and ".item()" in msgs
+
+
+def test_r3_jax_debug_needs_allow_comment():
+    flagged = _analyze("""
+        import jax
+        @jax.jit
+        def step(x):
+            jax.debug.print("x={}", x)
+            return x
+    """, path=PLAIN_PATH)
+    assert _rules(flagged) == ["R3"]
+    allowed = _analyze("""
+        import jax
+        @jax.jit
+        def step(x):
+            jax.debug.print("x={}", x)  # analyze: allow=R3 perf tracing
+            return x
+    """, path=PLAIN_PATH)
+    assert allowed == []
+
+
+def test_r3_ignores_host_effects_outside_jit():
+    out = _analyze("""
+        import numpy as np
+        def host_step(x):
+            print("fine here")
+            return np.asarray(x)
+    """, path=PLAIN_PATH)
+    assert out == []
+
+
+def test_r3_sees_jit_call_form_and_partial_decorator():
+    out = _analyze("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, n):
+            print(x)
+            return x
+        def g(x):
+            print(x)
+            return x
+        g = jax.jit(g)
+    """, path=PLAIN_PATH)
+    assert _rules(out) == ["R3", "R3"]
+
+
+# --------------------------------------------------------------- R4
+
+def test_r4_flags_mutable_default_and_float_static():
+    out = _analyze("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("scale",))
+        def f(x, scale=0.5, history=[]):
+            return x * scale
+    """, path=PLAIN_PATH)
+    assert sorted(_rules(out)) == ["R4", "R4"]
+    msgs = " | ".join(f.message for f in out)
+    assert "float-valued static" in msgs and "mutable default" in msgs
+
+
+def test_r4_flags_unknown_static_name():
+    out = _analyze("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("cfg",))
+        def f(x, n):
+            return x
+    """, path=PLAIN_PATH)
+    assert _rules(out) == ["R4"]
+    assert "`cfg`" in out[0].message
+
+
+def test_r4_clean_hashable_statics():
+    out = _analyze("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("n", "mode"))
+        def f(x, n=4, mode="fused"):
+            return x * n
+    """, path=PLAIN_PATH)
+    assert out == []
+
+
+# --------------------------------------------------------------- R5
+
+def test_r5_flags_f64_in_parity_frozen_module():
+    out = _analyze("""
+        import jax
+        import jax.numpy as jnp
+        def promote(x):
+            y = x.astype(jnp.float64)
+            z = jnp.zeros(3, dtype="float64")
+            jax.config.update("jax_enable_x64", True)
+            return y + z
+    """, path=MODEL_PATH)
+    assert sorted(set(_rules(out))) == ["R5"]
+    assert len(out) >= 3
+
+
+def test_r5_allows_host_numpy_f64_and_other_modules():
+    host = _analyze("""
+        import numpy as np
+        errs = np.zeros(4, dtype=np.float64)
+    """, path="src/repro/core/batched_eval.py")
+    assert host == []
+    elsewhere = _analyze("""
+        import jax.numpy as jnp
+        y = jnp.float64(1.0)
+    """, path=PLAIN_PATH)
+    assert elsewhere == []
+
+
+# --------------------------------------------------------- baseline
+
+def test_baseline_round_trip(tmp_path):
+    findings = _analyze("""
+        import numpy as np
+        x = np.random.rand(3)
+    """)
+    assert _rules(findings) == ["R1"]
+    path = tmp_path / "baseline.json"
+    bl.write_baseline(str(path), findings, {})
+    # fresh entries carry a TODO justification the loader must reject
+    with pytest.raises(bl.BaselineError):
+        data = json.loads(path.read_text())
+        for e in data["findings"]:
+            e["justification"] = ""
+        path.write_text(json.dumps(data))
+        bl.load_baseline(str(path))
+    data = json.loads(path.read_text())
+    for e in data["findings"]:
+        e["justification"] = "legacy fixture, tracked in ISSUE 6"
+    path.write_text(json.dumps(data))
+    base = bl.load_baseline(str(path))
+    new, grandfathered, stale = bl.apply_baseline(findings, base)
+    assert new == [] and len(grandfathered) == 1 and stale == []
+
+
+def test_baseline_stale_and_new(tmp_path):
+    findings = _analyze("""
+        import numpy as np
+        x = np.random.rand(3)
+    """)
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"version": 1, "findings": [
+        {"rule": "R1", "path": "src/gone.py", "line": 9,
+         "justification": "was removed"}]}))
+    new, grandfathered, stale = bl.apply_baseline(
+        findings, bl.load_baseline(str(path)))
+    assert len(new) == 1 and grandfathered == [] \
+        and stale == [("R1", "src/gone.py", 9)]
+
+
+def test_write_baseline_preserves_justifications_across_line_drift(tmp_path):
+    f1 = _analyze("import numpy as np\nx = np.random.rand(3)\n")
+    path = tmp_path / "baseline.json"
+    prev = {(f1[0].rule, f1[0].path, f1[0].line): "known exception"}
+    # same finding, shifted one line
+    f2 = _analyze("import numpy as np\n\nx = np.random.rand(3)\n")
+    bl.write_baseline(str(path), f2, prev)
+    base = bl.load_baseline(str(path))
+    assert list(base.values()) == ["known exception"]
+
+
+# ------------------------------------------------- jaxpr contracts
+
+@pytest.fixture(scope="module")
+def sru_harness():
+    from repro.core.target_registry import get_contract_harness
+    return get_contract_harness("sru")
+
+
+def test_contracts_pass_on_real_sru(sru_harness):
+    from tools.analysis.contracts import check_harness
+    assert check_harness(sru_harness) == []
+
+
+def test_contracts_fail_on_requantizing_forward(sru_harness):
+    """A 'banked' forward that ignores the banks and fake-quants its
+    weights must trip C1 (the gather-don't-requantize contract)."""
+    import dataclasses
+
+    from repro.models import sru
+    from tools.analysis.contracts import check_harness
+
+    h = sru_harness
+    cfg = h.target.cfg
+
+    def requantizing_forward(params, feats, qp_stack, banks=None):
+        return sru.forward_population(params, cfg, feats, qp_stack,
+                                      fused=True, banks=None)
+
+    bad = dataclasses.replace(h, forward_pop=requantizing_forward,
+                              supports_requant=False)
+    findings = check_harness(bad)
+    assert any(f.rule == "C1" and "re-quantized" in f.message
+               for f in findings)
+    assert all(f.path == h.anchor_path for f in findings)
+
+
+def test_contract_registry_lists_both_targets():
+    from repro.core import target_registry as tr
+    assert {"sru", "xlstm"} <= set(tr.list_contract_targets())
+    h = tr.get_contract_harness("sru")
+    assert h.marker_dim == tr.MARKER_DIM == 3
+    with pytest.raises(KeyError):
+        tr.get_contract_harness("nope")
+
+
+def test_contract_registry_custom_target(sru_harness):
+    import dataclasses
+
+    from repro.core import target_registry as tr
+    from tools.analysis.contracts import run_contracts
+
+    custom = dataclasses.replace(sru_harness, name="custom")
+    tr.register_contract_target("custom", lambda: custom)
+    try:
+        assert "custom" in tr.list_contract_targets()
+        assert run_contracts(["custom"]) == []
+    finally:
+        tr._CUSTOM.pop("custom", None)
+
+
+# --------------------------------------------------------- repo gate
+
+def test_repo_tree_is_clean():
+    """The merged tree must lint clean (modulo the committed baseline) —
+    the same invariant `python -m tools.analysis` enforces in check.sh."""
+    from tools.analysis import analyze_paths, apply_baseline, load_baseline
+    from tools.analysis.__main__ import DEFAULT_BASELINE
+    findings = analyze_paths(["src", "examples", "benchmarks"])
+    new, _, _ = apply_baseline(findings, load_baseline(DEFAULT_BASELINE))
+    assert new == [], "\n".join(f.format() for f in new)

@@ -1,0 +1,18 @@
+"""repro-analyze: the static-analysis gate over the search hot path.
+
+Layer 1 (AST invariant lint, rules R1-R5) + Layer 2 (jaxpr contract
+checks C1-C4) with a committed-baseline workflow. Run as
+``python -m tools.analysis [paths...]``; see ``tools/check.sh`` (stage
+``analyze``) and the ROADMAP "Static-analysis gate" section.
+"""
+from tools.analysis.baseline import (BaselineError, apply_baseline,
+                                     load_baseline, write_baseline)
+from tools.analysis.core import (Finding, ModuleContext, Rule,
+                                 analyze_paths, analyze_source)
+from tools.analysis.rules import ALL_RULES
+
+__all__ = [
+    "ALL_RULES", "BaselineError", "Finding", "ModuleContext", "Rule",
+    "analyze_paths", "analyze_source", "apply_baseline", "load_baseline",
+    "write_baseline",
+]

@@ -1,0 +1,98 @@
+"""CLI of the static-analysis gate: ``python -m tools.analysis``.
+
+Exit codes: 0 = clean (or all findings baselined with justifications),
+1 = new findings / failed contracts, 2 = usage or baseline-file errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from tools.analysis import baseline as bl
+from tools.analysis.core import analyze_paths
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="repro-analyze: AST invariant lint (R1-R5) + jaxpr "
+                    "contract checks (C1-C4) over the search hot path.")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as a JSON array on stdout")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file grandfathering documented "
+                         "exceptions (default: tools/analysis/baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current findings "
+                         "(justifications preserved; new entries get a "
+                         "TODO the loader rejects until filled in)")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the jaxpr contract checks (Layer 2)")
+    ap.add_argument("--contracts-only", action="store_true",
+                    help="run only the jaxpr contract checks")
+    ap.add_argument("--targets", nargs="*", default=None,
+                    help="contract-check only these registered targets "
+                         "(default: all)")
+    args = ap.parse_args(argv)
+
+    findings = []
+    if not args.contracts_only:
+        paths = args.paths or ["src"]
+        missing = [p for p in paths if not os.path.exists(p)]
+        if missing:
+            print(f"error: no such path(s): {missing}", file=sys.stderr)
+            return 2
+        findings += analyze_paths(paths)
+    if not args.no_contracts:
+        from tools.analysis.contracts import run_contracts
+        findings += run_contracts(args.targets)
+
+    if args.write_baseline:
+        prev = {}
+        try:
+            prev = bl.load_baseline(args.baseline)
+        except bl.BaselineError:
+            pass    # regenerating anyway; salvage nothing from a bad file
+        n = bl.write_baseline(args.baseline, findings, prev)
+        print(f"wrote {n} baseline entries to {args.baseline}")
+        return 0
+
+    try:
+        base = bl.load_baseline(args.baseline)
+    except bl.BaselineError as e:
+        print(f"baseline error: {e}", file=sys.stderr)
+        return 2
+    new, grandfathered, stale = bl.apply_baseline(findings, base)
+
+    if args.as_json:
+        print(json.dumps([dict(f.to_json(), baselined=(f in grandfathered))
+                          for f in findings], indent=2))
+    else:
+        for f in new:
+            print(f.format())
+        for f in grandfathered:
+            key = (f.rule, f.path, f.line)
+            print(f"{f.format()}  [baselined: {base[key]}]")
+        for rule, path, line in stale:
+            print(f"warning: stale baseline entry {path}:{line} {rule} "
+                  "(no longer matches a finding — remove it)",
+                  file=sys.stderr)
+        if new:
+            print(f"\n{len(new)} new finding(s) — fix them or baseline "
+                  f"with justification in {args.baseline}",
+                  file=sys.stderr)
+        elif findings:
+            print(f"all {len(findings)} finding(s) baselined; gate clean")
+        else:
+            print("repro-analyze: no findings; gate clean")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,101 @@
+"""Committed-baseline workflow for the static-analysis gate.
+
+``baseline.json`` grandfathers documented exceptions: each entry names a
+finding by ``(rule, path, line)`` and MUST carry a non-empty
+``justification`` string — an unjustified entry is itself a gate failure
+(exit 2), so exceptions stay documented, never silently accumulated. New
+findings (not in the baseline) fail the gate; baselined entries that no
+longer match any finding are reported as stale warnings so the file shrinks
+as code is fixed.
+
+Schema::
+
+    {"version": 1,
+     "findings": [{"rule": "R3", "path": "src/...", "line": 42,
+                   "justification": "why this one is intentional"}]}
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence, Tuple
+
+from tools.analysis.core import Finding
+
+BASELINE_VERSION = 1
+
+Key = Tuple[str, str, int]
+
+
+class BaselineError(Exception):
+    """Malformed baseline file (bad schema, missing justification)."""
+
+
+def _key(entry: dict) -> Key:
+    return (entry["rule"], entry["path"], int(entry["line"]))
+
+
+def load_baseline(path: str) -> Dict[Key, str]:
+    """Load a baseline file -> {(rule, path, line): justification}.
+    A missing file is an empty baseline; a malformed one raises."""
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            data = json.load(fh)
+    except FileNotFoundError:
+        return {}
+    except json.JSONDecodeError as e:
+        raise BaselineError(f"{path}: not valid JSON ({e})") from e
+    if not isinstance(data, dict) or data.get("version") != BASELINE_VERSION:
+        raise BaselineError(
+            f"{path}: expected {{'version': {BASELINE_VERSION}, ...}}")
+    out: Dict[Key, str] = {}
+    for entry in data.get("findings", []):
+        try:
+            key = _key(entry)
+        except (KeyError, TypeError, ValueError) as e:
+            raise BaselineError(
+                f"{path}: entry missing rule/path/line: {entry!r}") from e
+        just = entry.get("justification", "")
+        if not isinstance(just, str) or not just.strip():
+            raise BaselineError(
+                f"{path}: {key[1]}:{key[2]} {key[0]} has no justification — "
+                "every baselined exception must say why it is intentional")
+        out[key] = just.strip()
+    return out
+
+
+def apply_baseline(findings: Sequence[Finding], baseline: Dict[Key, str]):
+    """Split findings into (new, grandfathered) and report stale baseline
+    keys that matched nothing."""
+    new: List[Finding] = []
+    grandfathered: List[Finding] = []
+    seen: set = set()
+    for f in findings:
+        key = (f.rule, f.path, f.line)
+        if key in baseline:
+            grandfathered.append(f)
+            seen.add(key)
+        else:
+            new.append(f)
+    stale = sorted(k for k in baseline if k not in seen)
+    return new, grandfathered, stale
+
+
+def write_baseline(path: str, findings: Sequence[Finding],
+                   previous: Dict[Key, str]) -> int:
+    """Regenerate the baseline from the current findings, preserving
+    justifications by (rule, path) so line drift doesn't lose them. New
+    entries get a TODO placeholder that load_baseline will reject until a
+    human writes the reason."""
+    by_rule_path = {(r, p): j for (r, p, _l), j in previous.items()}
+    entries = []
+    for f in sorted(set(findings), key=lambda f: (f.path, f.line, f.rule)):
+        just = previous.get((f.rule, f.path, f.line)) \
+            or by_rule_path.get((f.rule, f.path)) \
+            or "TODO: justify this exception"
+        entries.append({"rule": f.rule, "path": f.path, "line": f.line,
+                        "justification": just})
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": BASELINE_VERSION, "findings": entries},
+                  fh, indent=2)
+        fh.write("\n")
+    return len(entries)

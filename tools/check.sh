@@ -1,6 +1,17 @@
 #!/usr/bin/env bash
 # Repo check pipeline (the order mirrors how a CI provider would stage it):
 #
+#   0a. analyze    — repro-analyze static-analysis gate (tools/analysis):
+#                    AST invariant lint (R1 SeedSequence, R2 deprecated
+#                    entrypoints, R3 host effects in jit, R4 retrace
+#                    hazards, R5 parity-frozen dtypes) plus the jaxpr
+#                    contract checks (C1 gather-don't-requantize, C2 no
+#                    f64, C3 donation, C4 one dispatch/generation) traced
+#                    per registered SearchTarget. New findings fail; the
+#                    committed tools/analysis/baseline.json grandfathers
+#                    documented exceptions (justification required). See
+#                    ROADMAP "Static-analysis gate".
+#
 #   1. fast lane   — unit/parity tests, slow-marked suites skipped
 #   2. slow lane   — end-to-end suites under an 8-way host-device mesh
 #                    (the mesh-parity tests spawn their own subprocess with
@@ -13,7 +24,7 @@
 #                    SearchTarget/SearchSession surface and the platform
 #                    registry (runs before the fast lane)
 #
-# Usage: tools/check.sh [api|fast|slow|bench]   (no argument = all stages)
+# Usage: tools/check.sh [analyze|api|fast|slow|bench]  (no argument = all)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -32,6 +43,11 @@ if [ -n "$JAX_COMPILATION_CACHE_DIR" ]; then
 fi
 
 stage="${1:-all}"
+
+run_analyze() {
+  echo "== analyze: python -m tools.analysis (lint + jaxpr contracts) =="
+  python -m tools.analysis src/ examples/ benchmarks/
+}
 
 run_api_smoke() {
   echo "== api surface smoke: repro.core.api public names =="
@@ -72,11 +88,13 @@ run_bench() {
 }
 
 case "$stage" in
+  analyze) run_analyze ;;
   api)   run_api_smoke ;;
   fast)  run_api_smoke; run_fast ;;
   slow)  run_slow ;;
   bench) run_bench ;;
-  all)   run_api_smoke; run_fast; run_slow; run_bench ;;
-  *)     echo "unknown stage: $stage (want api|fast|slow|bench)" >&2; exit 2 ;;
+  all)   run_analyze; run_api_smoke; run_fast; run_slow; run_bench ;;
+  *)     echo "unknown stage: $stage (want analyze|api|fast|slow|bench)" >&2
+         exit 2 ;;
 esac
 echo "== check.sh: all requested stages passed =="
