@@ -352,7 +352,8 @@ def search_xlstm(quick: bool = False):
              "pareto": len(res.pareto), "bit_identical": True}]
 
 
-def search_pipeline_v2(full: bool = False, quick: bool = False) -> bool:
+def search_pipeline_v2(full: bool = False, quick: bool = False,
+                       rebaseline: bool = False) -> bool:
     """Search-loop evaluation pipeline v2 throughput. Three generations of
     the hot path are measured on identical candidate sets (interleaved —
     this box's CPU allocation is noisy) at the paper-style compact ranking
@@ -515,6 +516,69 @@ def search_pipeline_v2(full: bool = False, quick: bool = False) -> bool:
                 "errors_identical": True,
                 "n_retrains": bs.n_retrains}
 
+    def measure_checkpoint(tr, pop, trials=n_trials, gens=4):
+        """Steady-state cost of crash-safe checkpointing: the identical
+        seeded search with checkpointing off vs on (a save every
+        generation — incremental snapshot on the GA thread, encode +
+        checksummed durable write overlapped on the saver thread).
+
+        The GATED number is the machinery's own metered cost
+        (``SearchResult.checkpoint_stats``): wall time the foreground
+        capture steals from the search thread, CPU the writer thread
+        burns (an upper bound on steal when every core is busy), and the
+        final ``close()`` drain — summed and divided by the plain arm's
+        median wall time. Differencing two end-to-end wall clocks cannot
+        gate this: an identical-arms null experiment on this box shows
+        ±5-10% swing between two interleaved runs of the SAME search
+        (ambient load + run-order bias), an order of magnitude above the
+        effect being measured. The wall-clock A/B is still recorded
+        (order-alternated ABBA trials) as an informational cross-check.
+        Fronts are asserted equal, so the overhead number is for a
+        bit-identical result."""
+        import shutil
+        import tempfile
+
+        def run_once(ckpt_dir):
+            sess = api.SearchSession(tr, BITFUSION, ("error", "speedup"),
+                                     share_memo=False)
+            kw = dict(generations=gens, pop=pop, initial=pop, seed=0)
+            if ckpt_dir is not None:
+                return sess.run(checkpoint_dir=ckpt_dir, **kw)
+            return sess.run(**kw)
+
+        d = tempfile.mkdtemp(prefix="bench_ckpt_")
+        try:
+            plain_ref = run_once(None)                 # warm the compile
+            ckpt_ref = run_once(d)
+            assert ckpt_ref.front_key() == plain_ref.front_key(), \
+                "checkpointing changed the Pareto front"
+            tp, tc, costs = [], [], []
+            for t in range(trials):
+                arms = (None, d) if t % 2 == 0 else (d, None)
+                for arm in arms:
+                    t0 = time.perf_counter()
+                    r = run_once(arm)
+                    dt = time.perf_counter() - t0
+                    if arm is None:
+                        tp.append(dt)
+                    else:
+                        tc.append(dt)
+                        s = r.checkpoint_stats
+                        costs.append(s["foreground_s"] + s["worker_cpu_s"]
+                                     + s["drain_s"])
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        n_saves = gens + 1                             # gen 0 + each gen
+        cost = med(costs)
+        return {"pop": pop, "generations": gens, "n_saves": n_saves,
+                "plain_ms": med(tp) * 1e3, "ckpt_ms": med(tc) * 1e3,
+                "plain_min_ms": min(tp) * 1e3, "ckpt_min_ms": min(tc) * 1e3,
+                "machinery_ms": cost * 1e3,
+                "save_ms": cost * 1e3 / n_saves,
+                "overhead_frac": cost / med(tp),
+                "wall_overhead_frac": min(tc) / min(tp) - 1.0,
+                "front_identical": True}
+
     compact = dataclasses.replace(trained, val_subsets=subsets(1, 24))
 
     # Memoization on real seeded searches. Within ONE platform the alloc
@@ -559,6 +623,7 @@ def search_pipeline_v2(full: bool = False, quick: bool = False) -> bool:
         "plain_compact": [measure_plain(compact, 16, trials=n_trials + 6),
                           measure_plain(compact, 32, trials=n_trials + 6)],
         "beacon_compact": [measure_beacon(compact, 32)],
+        "checkpoint_compact": [measure_checkpoint(compact, 32)],
         "memo": memo,
     }
     if not quick:                       # full-shape rows skipped in CI lane
@@ -592,6 +657,14 @@ def search_pipeline_v2(full: bool = False, quick: bool = False) -> bool:
     emit("search_pipeline_v2_beacon_p32", b32["v2_grouped_ms"] * 1e3 / 32,
          f"v2_vs_pr1_detached={b32['speedup_v2_vs_pr1']:.2f}x;"
          f"beacons={b32['n_beacons']};errors_identical=True")
+    ck32 = results["checkpoint_compact"][0]
+    emit("search_checkpoint_p32", ck32["save_ms"] * 1e3,
+         f"overhead={ck32['overhead_frac']*100:.1f}%;"
+         f"wall_overhead={ck32['wall_overhead_frac']*100:.1f}%;"
+         f"save_ms={ck32['save_ms']:.2f};"
+         f"plain_ms={ck32['plain_min_ms']:.0f};"
+         f"ckpt_ms={ck32['ckpt_min_ms']:.0f};"
+         f"saves_per_search={ck32['n_saves']};front_identical=True")
     emit("search_pipeline_v2_memo", None,
          f"requested={memo['requested_evals']};unique={memo['unique_evals']};"
          f"cache_hits={memo['genome_cache_hits']};"
@@ -642,6 +715,10 @@ def search_pipeline_v2(full: bool = False, quick: bool = False) -> bool:
             print(f"NOTE: {msg} (cross-lane check, informational in "
                   f"--quick — see gate comment)")
             return True
+        if rebaseline:
+            print(f"NOTE: {msg} (waived by --rebaseline; a passing run "
+                  f"re-records the reference)")
+            return True
         print(f"REGRESSION: {msg}")
         return False
 
@@ -691,6 +768,25 @@ def search_pipeline_v2(full: bool = False, quick: bool = False) -> bool:
         print(f"NOTE: bank_vs_requant p32 compact "
               f"{bank32['speedup_bank_vs_v2']:.2f}x is below the 1.3x "
               f"issue target (CPU box; see gate comment) — not a failure")
+    # search_checkpoint gate: crash-safe checkpointing must stay cheap —
+    # <5% steady-state overhead on the whole pop-32 compact search. The
+    # gated number is the machinery's metered cost (foreground capture +
+    # writer-thread CPU + close drain; see measure_checkpoint — the wall
+    # A/B is too noisy to gate and is reported alongside as a
+    # cross-check). Hard on full runs; the trimmed --quick lane demotes
+    # it to a NOTE like the other cross-lane-noisy checks.
+    if ck32["overhead_frac"] > 0.05:
+        msg = (f"search_checkpoint p32 compact overhead "
+               f"{ck32['overhead_frac']*100:.1f}% exceeds the 5% budget "
+               f"(machinery {ck32['machinery_ms']:.1f}ms on a "
+               f"{ck32['plain_ms']:.0f}ms search over {ck32['n_saves']} "
+               f"saves)")
+        if quick:
+            print(f"NOTE: {msg} (informational in --quick — see gate "
+                  f"comment)")
+        else:
+            print(f"REGRESSION: {msg}")
+            ok = False
     if memo["alloc_memo_hits_sweep"] <= 0:
         print("REGRESSION: two-platform sweep produced zero alloc-memo "
               "hits — shared_error_memo key is broken")
@@ -703,10 +799,20 @@ def search_pipeline_v2(full: bool = False, quick: bool = False) -> bool:
 
     # only a passing FULL run may replace the stored reference — a
     # regressing run must not overwrite the very baseline it was gated
-    # against, and the trimmed --quick rows are not reference-grade
+    # against, and the trimmed --quick rows are not reference-grade.
+    # ``--rebaseline`` is the documented escape from the deadlock this
+    # policy creates when the shared box's state drifts (stored ratios
+    # become unreachable even for pristine code, so no run can ever pass
+    # again): it waives the CROSS-RUN stored-ratio checks only — every
+    # same-run gate stays hard — and a passing run then records fresh
+    # reference rows. Use it only after an A/B against the unmodified
+    # seed reproduces the miss.
     if ok and not quick:
         with open("BENCH_search_throughput.json", "w") as f:
             json.dump(results, f, indent=2)
+        if rebaseline:
+            print("BENCH_search_throughput.json re-recorded "
+                  "(--rebaseline: stored-ratio reference reset)")
     elif not ok:
         print("BENCH_search_throughput.json left untouched (regressing run "
               "does not reset the gate's reference)")
@@ -784,6 +890,11 @@ def main() -> None:
                     help="CI lane: skip the full-shape rows and the "
                          "end-to-end figure searches, trim trials, and "
                          "never rewrite BENCH_search_throughput.json")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="waive the cross-run stored-ratio checks (same-"
+                         "run gates stay hard) so a passing run can "
+                         "re-record the reference after box-state drift; "
+                         "see the gate comment in search_pipeline_v2")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived,us_first_call")
     table1_ops()
@@ -798,7 +909,8 @@ def main() -> None:
     nsga2_throughput()
     hlo_analyzer_bench()
     roofline_table()
-    ok = search_pipeline_v2(args.full, quick=args.quick)
+    ok = search_pipeline_v2(args.full, quick=args.quick,
+                            rebaseline=args.rebaseline)
     if not args.quick:
         fig7_10_search(args.full)
     if not ok:

@@ -32,10 +32,22 @@ def main():
                     help="force per-candidate evaluation (the batched "
                          "population evaluator is the default and returns "
                          "the identical Pareto front)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist crash-safe search checkpoints here (a "
+                         "repro.core.checkpointing.SearchStore; every "
+                         "experiment keys its own state)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume each search from the newest checkpoint "
+                         "in --checkpoint-dir (bit-identical to the "
+                         "uninterrupted run)")
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
     gens = args.generations or (6 if args.fast else 20)
     steps = args.train_steps or (150 if args.fast else 500)
     batched = not args.scalar
+    ckpt_kw = dict(checkpoint_dir=args.checkpoint_dir, resume=args.resume) \
+        if args.checkpoint_dir else {}
 
     t0 = time.time()
     print(f"[1/4] training SRU speech model ({steps} steps)...")
@@ -51,7 +63,7 @@ def main():
     t1 = time.time()
     res1 = SearchSession(trained, "mem-only", ("error", "memory"),
                          batched=batched).run(
-        log=lambda m: print("   ", m), **run_kw)
+        log=lambda m: print("   ", m), **run_kw, **ckpt_kw)
     print(f"  {res1.n_evals} candidate evals in {time.time()-t1:.1f}s "
           f"({(time.time()-t1)/max(res1.n_evals,1)*1e3:.0f} ms/eval)")
     print(res1.format())
@@ -61,7 +73,7 @@ def main():
     sram = int(trained.cfg.total_weights() * 32 / 8 / 3.5)
     res2 = SearchSession(trained, silago, ("error", "speedup", "energy"),
                          sram_override=sram, batched=batched).run(
-        log=lambda m: print("   ", m), **run_kw)
+        log=lambda m: print("   ", m), **run_kw, **ckpt_kw)
     print(res2.format())
     best = max(r["speedup"] for r in res2.rows())
     print(f"  max speedup found {best:.1f}x of SiLago max 4.0x "
@@ -72,11 +84,11 @@ def main():
     sram3 = int((mat * 3.5 + trained.vector_weights * 16) / 8)
     sess3 = SearchSession(trained, "bitfusion", ("error", "speedup"),
                           sram_override=sram3, batched=batched)
-    res3 = sess3.run(**run_kw)
+    res3 = sess3.run(**run_kw, **ckpt_kw)
     print("  inference-only search:")
     print(res3.format())
 
-    res3b = sess3.run(beacons=True, **run_kw)
+    res3b = sess3.run(beacons=True, **run_kw, **ckpt_kw)
     bs = res3b.beacon_search
     print(f"  beacon-based search ({bs.n_retrains} beacons retrained):")
     print(res3b.format())

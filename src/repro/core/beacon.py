@@ -62,7 +62,8 @@ class BeaconSearch:
     def from_target(cls, problem: MOHAQProblem, target, *,
                     retrain_steps: int = 60, batched: bool = True,
                     mesh=None, partition: str = "shard_map",
-                    distance_threshold: float = 6.0) -> "BeaconSearch":
+                    distance_threshold: float = 6.0,
+                    skip_retrains: int = 0) -> "BeaconSearch":
         """Build the beacon wrapper from any ``SearchTarget`` (see
         ``repro.core.api``): the retrainer comes from
         ``target.beacon_retrainer(steps)`` (one data stream per search, so
@@ -70,7 +71,13 @@ class BeaconSearch:
         the historical experiment wiring) and both error evaluators are
         the target's parameter-explicit paths. Beacon groups shard
         independently when a ``mesh`` is given: every grouped call is
-        itself a population partitioned over the mesh."""
+        itself a population partitioned over the mesh.
+
+        ``skip_retrains`` fast-forwards the retraining data stream past
+        the first N retrains (checkpoint resume: the restored beacons
+        already consumed those batches, so the (N+1)-th retrain of the
+        resumed search must see the exact batches the uninterrupted run
+        would — targets support it via the stream's ``start_step``)."""
         def error_with_params(params, alloc):
             return target.val_error(alloc, params=params)
 
@@ -78,8 +85,13 @@ class BeaconSearch:
             return target.val_error_batch(allocs, params=params, mesh=mesh,
                                           partition=partition)
 
+        if skip_retrains:
+            retrain_fn = target.beacon_retrainer(
+                retrain_steps, skip_retrains=skip_retrains)
+        else:
+            retrain_fn = target.beacon_retrainer(retrain_steps)
         return cls(problem=problem, base_params=target.params,
-                   retrain_fn=target.beacon_retrainer(retrain_steps),
+                   retrain_fn=retrain_fn,
                    error_with_params=error_with_params,
                    batch_error_with_params=(batch_error_with_params
                                             if batched else None),

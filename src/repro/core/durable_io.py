@@ -1,0 +1,225 @@
+"""Shared durability primitives for every on-disk artifact the repo owns.
+
+Both checkpoint families — QAT training checkpoints
+(``repro.training.checkpoint``) and crash-safe search checkpoints
+(``repro.core.checkpointing``) — write through this module, so the
+durability contract is identical everywhere:
+
+- ``atomic_write_bytes``: tmp file + data sync (``fdatasync`` where the
+  OS has it) + ``os.replace`` + parent directory fsync. A crash at ANY
+  point leaves either the previous file
+  intact or the new file complete; a torn tmp file is dead weight that the
+  next save sweeps up, never something a reader can observe.
+- ``write_checksummed``/``read_checksummed``: a one-line header
+  (``REPRO-CKPT1 <sha256> <length>``) in front of the payload. Readers
+  verify length and digest and raise ``CorruptFileError`` on any mismatch
+  — callers fall back to the previous good generation instead of loading
+  garbage.
+- ``flatten_tree``/``unflatten_like``/``tree_digest``: the pytree <->
+  flat-dict mapping (and its content digest) shared by training restores
+  and beacon-parameter serialization.
+
+Fault-injection hook: ``REPRO_CKPT_CRASH_AFTER_TMP=K`` makes the K-th
+``write_checksummed`` call SIGKILL the process after the tmp file is
+written but before the rename — the torn-write scenario the kill-and-
+resume tests assert recovery from.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import signal
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+_MAGIC = b"REPRO-CKPT1"
+
+# countdown for the torn-write fault hook; initialized lazily from the
+# environment so subprocess tests can arm it per run
+_crash_countdown = None
+
+
+class CorruptFileError(RuntimeError):
+    """A durable file failed its integrity check (torn write, truncation,
+    bit rot). Callers fall back to the previous good copy."""
+
+
+def sha256_bytes(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so a just-renamed entry survives power loss."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+# fdatasync skips the pure-metadata (mtime) journal commit — measurably
+# cheaper on ext4 and sufficient here: it still flushes the data and any
+# metadata needed to retrieve it (the file is freshly written, so its
+# size IS retrieval metadata), and the entry's existence is committed by
+# the post-rename directory fsync. Windows has no fdatasync.
+_fdatasync = getattr(os, "fdatasync", os.fsync)
+
+
+def atomic_write_bytes(path: str, data: bytes) -> None:
+    """Durable atomic file replacement: write ``path``'s new content to a
+    tmp file, fsync it, rename over ``path``, fsync the directory."""
+    path = os.path.abspath(path)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        _fdatasync(f.fileno())
+    os.replace(tmp, path)
+    fsync_dir(os.path.dirname(path))
+
+
+def _maybe_crash_after_tmp() -> None:
+    """Torn-write fault hook (see module docstring): SIGKILL with the tmp
+    file on disk and the rename never issued."""
+    global _crash_countdown
+    if _crash_countdown is None:
+        _crash_countdown = int(os.environ.get("REPRO_CKPT_CRASH_AFTER_TMP",
+                                              0) or 0)
+    if _crash_countdown <= 0:
+        return
+    _crash_countdown -= 1
+    if _crash_countdown == 0:
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
+def write_checksummed(path: str, payload: bytes, *,
+                      sync: bool = True) -> None:
+    """Atomically write ``header + payload`` where the header carries the
+    payload's sha256 and length (verified by ``read_checksummed``).
+
+    ``sync=False`` skips both the file data sync and the parent-
+    directory fsync, deferring power-loss durability to a later
+    ``fsync_path``/``fsync_dir`` — e.g. one seal per search instead of
+    two syncs per generation. Atomicity and the checksum are unaffected:
+    a reader still sees either the old file or the complete new one, and
+    a torn-after-power-loss tail is detected on read and skipped.
+    Process death (SIGKILL, OOM) never needs any sync — the page cache
+    survives it."""
+    header = b"%s %s %d\n" % (_MAGIC, sha256_bytes(payload).encode(),
+                              len(payload))
+    path = os.path.abspath(path)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    # raw fd, not a BufferedWriter: this runs per checkpoint on the saver
+    # thread, and the buffering layer only adds an extra copy + syscalls
+    fd = os.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o666)
+    try:
+        view = memoryview(header + payload)
+        while view:
+            view = view[os.write(fd, view):]
+        if sync:
+            _fdatasync(fd)
+    finally:
+        os.close(fd)
+    _maybe_crash_after_tmp()
+    os.replace(tmp, path)
+    if sync:
+        fsync_dir(os.path.dirname(path))
+
+
+def fsync_path(path: str) -> None:
+    """Flush an already-written file's data to stable storage (the seal
+    half of ``write_checksummed(..., sync=False)``)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        _fdatasync(fd)
+    finally:
+        os.close(fd)
+
+
+def read_checksummed(path: str) -> bytes:
+    """Read and verify a ``write_checksummed`` file; raises
+    ``CorruptFileError`` on truncation, digest mismatch, or a mangled
+    header (never returns unverified bytes)."""
+    with open(path, "rb") as f:
+        header = f.readline()
+        payload = f.read()
+    parts = header.split()
+    if len(parts) != 3 or parts[0] != _MAGIC:
+        raise CorruptFileError(f"{path}: bad header {header[:64]!r}")
+    try:
+        expect_len = int(parts[2])
+    except ValueError:
+        raise CorruptFileError(f"{path}: non-integer length in header")
+    if len(payload) != expect_len:
+        raise CorruptFileError(f"{path}: truncated payload "
+                               f"({len(payload)} of {expect_len} bytes)")
+    digest = sha256_bytes(payload)
+    if digest != parts[1].decode():
+        raise CorruptFileError(f"{path}: sha256 mismatch")
+    return payload
+
+
+def sweep_tmp_files(directory: str) -> int:
+    """Delete leftover ``*.tmp-<pid>`` files from crashed writers; returns
+    the count removed. Safe concurrently: live writers use their own pid."""
+    removed = 0
+    if not os.path.isdir(directory):
+        return removed
+    for name in os.listdir(directory):
+        if ".tmp-" in name:
+            try:
+                os.remove(os.path.join(directory, name))
+                removed += 1
+            except FileNotFoundError:
+                pass   # another sweeper got it first; nothing to clean
+    return removed
+
+
+# ------------------------------------------------------- pytree <-> flat
+
+def flatten_tree(tree) -> Dict[str, Any]:
+    """Flatten a pytree to {joined-path: leaf} with ``/``-joined keys —
+    the on-disk naming every checkpoint family shares."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def unflatten_like(template, flat: Dict[str, np.ndarray]):
+    """Rebuild a pytree with ``template``'s structure from a
+    ``flatten_tree``-keyed dict of host arrays. Void-dtype arrays (numpy's
+    raw-bytes storage for bfloat16) are re-viewed with the template leaf's
+    dtype."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for pth, leaf in paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        arr = flat[key]
+        if arr.dtype.kind == "V":
+            arr = arr.view(np.dtype(leaf.dtype))
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def tree_digest(tree) -> str:
+    """Content digest of a pytree: sha256 over the sorted flat keys plus
+    each leaf's dtype/shape/bytes. Stable across processes — the basis of
+    target fingerprints and beacon-parameter digests."""
+    h = hashlib.sha256()
+    flat = {k: np.asarray(jax.device_get(v))
+            for k, v in flatten_tree(tree).items()}
+    for key in sorted(flat):
+        arr = flat[key]
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()

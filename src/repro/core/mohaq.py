@@ -57,6 +57,16 @@ class MOHAQProblem:
     error_memo: Optional[Dict[tuple, float]] = None
     memo_hits: int = 0
     n_error_evals: int = 0
+    # NaN/Inf quarantine (graceful degradation): a poisoned error value
+    # would break the dominance machinery (NaN comparisons are all-False,
+    # so a poisoned individual looks non-dominated and corrupts front 0).
+    # ``_finish`` instead records the genome, assigns worst-case
+    # objectives plus a large constraint violation (Deb's feasibility rule
+    # keeps it off every feasible front) and the search continues; each
+    # quarantined allocation is logged once in ``quarantine_log``.
+    quarantine_log: List[Dict] = field(default_factory=list)
+    n_quarantined: int = 0
+    _quarantined_keys: set = field(default_factory=set)
 
     def __post_init__(self):
         menu = [b for b in (2, 4, 8, 16) if b in self.hardware.supported_bits]
@@ -125,8 +135,34 @@ class MOHAQProblem:
             return alloc, 0.0
         return alloc, (size / self.hardware.sram_bytes) - 1.0
 
+    # constraint violation assigned to quarantined genomes: large enough
+    # that no legitimately-infeasible candidate (violations are O(1))
+    # ever dominates one, so quarantine can never displace real solutions
+    QUARANTINE_VIOLATION = 1e6
+
+    def _quarantine(self, alloc: Alloc, raw_err: float) -> None:
+        # count/log each distinct allocation once: re-encounters (memo
+        # hits on a NaN entry) re-apply the worst-case objectives but are
+        # not new quarantine events, so ``n_quarantined`` always equals
+        # ``len(quarantine_log)`` (checkpoint resume relies on this)
+        key = self._alloc_key(alloc)
+        if key not in self._quarantined_keys:
+            self._quarantined_keys.add(key)
+            self.n_quarantined += 1
+            self.quarantine_log.append({
+                "alloc": {n: list(alloc[n]) for n in self.layer_names},
+                "raw_error": float(raw_err),
+                "action": "quarantined (worst-case objectives, "
+                          "excluded from feasible fronts)"})
+
     def _finish(self, alloc: Alloc, err: float,
                 violation: float) -> Tuple[List[float], float]:
+        if violation == 0.0 and not np.isfinite(err):
+            # poisoned evaluation (NaN/Inf from a faulty lane): quarantine
+            # instead of letting NaN corrupt the dominance matrix
+            self._quarantine(alloc, err)
+            err = float("inf")
+            violation = self.QUARANTINE_VIOLATION
         if np.isfinite(err) and \
                 err > self.baseline_error + self.feasible_error_margin:
             violation += (err - self.baseline_error
@@ -225,14 +261,20 @@ class MOHAQResult:
 def run_search(problem: MOHAQProblem, *, n_generations: int = 60,
                pop_size: int = 10, initial_pop_size: int = 40,
                seed: int = 0, log=None,
-               batched: Optional[bool] = None) -> MOHAQResult:
+               batched: Optional[bool] = None,
+               on_generation=None, resume_state=None) -> MOHAQResult:
     """Inference-only search (paper §4.2). 60 generations x 10 individuals
     (40 in generation 0) — the paper's settings.
 
     ``batched=None`` (auto) scores each generation's candidates with one
     vmapped forward whenever the problem has a ``batch_error_fn`` wired;
     ``batched=False`` forces the per-candidate scalar path. Both paths visit
-    identical genomes and return the identical Pareto front."""
+    identical genomes and return the identical Pareto front.
+
+    ``on_generation``/``resume_state`` pass straight through to
+    ``NSGA2.run`` — the checkpoint/resume hooks (see
+    ``repro.core.checkpointing``; restoring the problem's error memo and
+    counters is the caller's job)."""
     codes = problem.codes
     if batched is None:
         batched = problem.batch_error_fn is not None
@@ -241,7 +283,7 @@ def run_search(problem: MOHAQProblem, *, n_generations: int = 60,
                evaluate_batch=problem.evaluate_population if batched else None,
                pop_size=pop_size, initial_pop_size=initial_pop_size,
                n_generations=n_generations, seed=seed, log=log)
-    pareto = ga.run()
+    pareto = ga.run(resume=resume_state, on_generation=on_generation)
     if log:
         log(f"search done: evals={len(ga.history)} "
             f"cache_hits={ga.n_cache_hits} memo_hits={problem.memo_hits} "

@@ -268,17 +268,58 @@ class NSGA2:
                 out.append(c)
         return out[:self.pop_size]
 
-    def run(self) -> List[Individual]:
+    def run(self, *, resume: Optional[dict] = None,
+            on_generation: Optional[Callable[[dict], None]] = None
+            ) -> List[Individual]:
+        """``on_generation`` (optional) is called after the initial
+        population and after every completed generation with a state dict
+        {next_gen, population, history, n_cache_hits} — the checkpoint
+        hook. ``resume`` (a dict of the same shape) restarts the loop at
+        ``next_gen``; because generation ``gen`` always draws from spawned
+        key ``1 + gen`` (a pure function of the master seed and the spawn
+        index — never of how many draws earlier code consumed), a resumed
+        run replays the exact variation stream and the final Pareto front
+        is bit-identical to the uninterrupted run."""
         # one master key, one spawned child stream per stochastic site:
         # keys[0] seeds the initial population, keys[1 + gen] seeds
         # generation ``gen``'s variation (tournament/crossover/mutation)
         keys = np.random.SeedSequence(self.seed).spawn(self.n_generations + 1)
-        rng = np.random.default_rng(keys[0])
         cache: dict = {}
-        pop = self._eval_many(
-            [rng.integers(self.var_lo, self.var_hi + 1, self.n_var)
-             for _ in range(self.initial_pop_size)], cache)
-        for gen in range(self.n_generations):
+
+        def notify(next_gen: int, pop: List[Individual]) -> None:
+            if on_generation is not None:
+                on_generation({"next_gen": next_gen, "population": pop,
+                               "history": self.history,
+                               "n_cache_hits": self.n_cache_hits})
+
+        if resume is not None:
+            start_gen = int(resume["next_gen"])
+            if start_gen > self.n_generations:
+                raise ValueError(
+                    f"resume state has {start_gen} generations done but "
+                    f"this run asks for {self.n_generations}")
+            # fresh copies: the live population mutates rank/crowding and
+            # must never alias the caller's (checkpointed) individuals
+            self.history = [
+                Individual(i.genome.copy(),
+                           np.asarray(i.objectives, float).copy(),
+                           float(i.violation)) for i in resume["history"]]
+            for ind in self.history:
+                cache[ind.key()] = ind
+            self.n_cache_hits = int(resume["n_cache_hits"])
+            pop = [Individual(i.genome.copy(),
+                              np.asarray(i.objectives, float).copy(),
+                              float(i.violation), int(i.rank),
+                              float(i.crowding))
+                   for i in resume["population"]]
+        else:
+            start_gen = 0
+            rng = np.random.default_rng(keys[0])
+            pop = self._eval_many(
+                [rng.integers(self.var_lo, self.var_hi + 1, self.n_var)
+                 for _ in range(self.initial_pop_size)], cache)
+            notify(0, pop)
+        for gen in range(start_gen, self.n_generations):
             for front in fast_non_dominated_sort(pop):
                 assign_crowding(front)
             children = self._eval_many(
@@ -295,6 +336,7 @@ class NSGA2:
                     survivors.extend(front[:self.pop_size - len(survivors)])
                     break
             pop = survivors
+            notify(gen + 1, pop)
             if self.log:
                 best = min(p.objectives[0] for p in pop if p.violation == 0) \
                     if any(p.violation == 0 for p in pop) else float("nan")

@@ -109,13 +109,19 @@ class TrainedSRU:
         folded into the speedup normalization, Eq. 4)."""
         return 14 * self.cfg.hidden * 2 * self.cfg.n_sru_layers * 2
 
-    def beacon_retrainer(self, retrain_steps: int = 60):
+    def beacon_retrainer(self, retrain_steps: int = 60, *,
+                         skip_retrains: int = 0):
         """One retraining context per search: the returned
         ``retrain_fn(alloc, base_params)`` draws successive batches from a
         single seeded stream, so the k-th retrain of any search sees the
         identical data regardless of which alloc triggered it — the exact
-        historical experiment-3 wiring."""
-        data = synthetic.speech_batches(self.task, 8, 48, seed=3)
+        historical experiment-3 wiring. ``skip_retrains`` fast-forwards
+        the stream past the first N retrains (each consumes exactly
+        ``retrain_steps`` batches), so a checkpoint-resumed search's next
+        retrain sees the identical batches the uninterrupted run would."""
+        data = synthetic.speech_batches(
+            self.task, 8, 48, seed=3,
+            start_step=skip_retrains * retrain_steps)
 
         def retrain_fn(alloc: Alloc, base_params):
             wclips = {n: self.wclips[(n, a[0])]

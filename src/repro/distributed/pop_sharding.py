@@ -67,6 +67,19 @@ def padded_pop(bucket: int, n_shards: int) -> int:
     return -(-bucket // n_shards) * n_shards
 
 
+def shrink_mesh(mesh: Mesh, keep: int, axis: str = POP_AXIS) -> Mesh:
+    """The surviving mesh after a (simulated) device loss: the first
+    ``keep`` devices of the population axis, same axis name. Used by the
+    evaluator's graceful-degradation path — populations re-pad to the new
+    shard count and lanes stay independent, so re-dispatching on the
+    shrunk mesh reproduces every real lane's error count exactly."""
+    n = pop_axis_size(mesh, axis)
+    if not 0 < keep < n:
+        raise ValueError(f"keep={keep} must shrink the {n}-shard mesh")
+    survivors = mesh.devices.reshape(-1)[:keep]
+    return Mesh(survivors.reshape(keep), (axis,))
+
+
 def shard_population(fn: Callable, mesh: Mesh, *, n_replicated: int,
                      axis: str = POP_AXIS, mode: str = "shard_map"):
     """Partition ``fn(*replicated_args, batched_arg)`` over the population

@@ -1,13 +1,17 @@
 """Fault-tolerant checkpointing: atomic, keep-k, async, elastic.
 
 Layout: <dir>/step_<N>/arrays.npz + manifest.json (step, flat keys, config
-hash, saved mesh). Writes go to a tmp dir + os.replace (atomic on POSIX) so a
-crash mid-save never corrupts the latest checkpoint. Restore rebuilds the
-pytree and (re)shards to WHATEVER mesh is active — device count may differ
-from save time (elastic restart).
+hash, saved mesh, per-file sha256 checksums). Durability goes through the
+shared ``repro.core.durable_io`` primitives (the same code the search
+checkpoints use): every file is written + fsynced before the tmp dir is
+renamed into place and the parent directory fsynced, so a crash (or power
+loss) mid-save never corrupts the latest checkpoint. Restore verifies the
+array checksum and rebuilds the pytree, (re)sharding to WHATEVER mesh is
+active — device count may differ from save time (elastic restart).
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
@@ -18,16 +22,17 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.core.durable_io import (CorruptFileError, flatten_tree as _flatten,
+                                   fsync_dir, sha256_bytes)
+
 SEP = "/"
 
 
-def _flatten(tree) -> Dict[str, Any]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = SEP.join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        flat[key] = leaf
-    return flat
+def _write_fsynced(path: str, data: bytes) -> None:
+    with open(path, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
@@ -40,15 +45,21 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-    manifest = {"step": step, "keys": sorted(flat), "time": time.time()}
+    bio = io.BytesIO()
+    np.savez(bio, **flat)
+    arrays = bio.getvalue()
+    _write_fsynced(os.path.join(tmp, "arrays.npz"), arrays)
+    manifest = {"step": step, "keys": sorted(flat), "time": time.time(),
+                "checksums": {"arrays.npz": sha256_bytes(arrays)}}
     if extra:
         manifest.update(extra)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    _write_fsynced(os.path.join(tmp, "manifest.json"),
+                   json.dumps(manifest).encode())
+    fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    fsync_dir(ckpt_dir)
     _gc(ckpt_dir, keep)
     return final
 
@@ -77,7 +88,18 @@ def restore(ckpt_dir: str, target_tree, step: Optional[int] = None,
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with np.load(os.path.join(path, "arrays.npz")) as z:
+    with open(os.path.join(path, "arrays.npz"), "rb") as f:
+        arrays = f.read()
+    manifest_path = os.path.join(path, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        expect = manifest.get("checksums", {}).get("arrays.npz")
+        if expect is not None and sha256_bytes(arrays) != expect:
+            raise CorruptFileError(
+                f"{path}/arrays.npz sha256 mismatch — checkpoint is "
+                "corrupt; restore an earlier step")
+    with np.load(io.BytesIO(arrays)) as z:
         flat = {k: z[k] for k in z.files}
     leaves_with_path = jax.tree_util.tree_flatten_with_path(target_tree)
     paths, treedef = leaves_with_path

@@ -240,6 +240,79 @@ def test_r5_allows_host_numpy_f64_and_other_modules():
     assert elsewhere == []
 
 
+# --------------------------------------------------------------- R6
+
+def test_r6_flags_bare_except_in_core():
+    out = _analyze("""
+        def load():
+            try:
+                return open("x").read()
+            except:
+                return None
+    """)
+    assert _rules(out) == ["R6"]
+    assert "bare `except:`" in out[0].message
+
+
+def test_r6_flags_blanket_swallow():
+    out = _analyze("""
+        def drain(items):
+            for it in items:
+                try:
+                    it.close()
+                except Exception:
+                    pass
+            try:
+                items.flush()
+            except (ValueError, BaseException):
+                ...
+    """)
+    assert _rules(out) == ["R6", "R6"]
+
+
+def test_r6_allows_named_and_handled():
+    out = _analyze("""
+        import warnings
+        def load(path):
+            try:
+                return open(path).read()
+            except FileNotFoundError:
+                return None
+            except OSError as e:
+                warnings.warn(str(e))
+                raise
+        def retry(fn):
+            try:
+                return fn()
+            except Exception as e:
+                # a blanket catch that HANDLES (logs + re-raises) is fine
+                warnings.warn(str(e))
+                raise
+    """)
+    assert out == []
+
+
+def test_r6_scope_and_pragma():
+    src = """
+        def f():
+            try:
+                return 1
+            except:
+                return 0
+    """
+    assert _analyze(src, path=PLAIN_PATH) == []          # out of scope
+    assert _rules(_analyze(
+        src, path="src/repro/distributed/fixture.py")) == ["R6"]
+    allowed = _analyze("""
+        def f():
+            try:
+                return 1
+            except:   # analyze: allow=R6 legacy shim boundary
+                return 0
+    """)
+    assert allowed == []
+
+
 # --------------------------------------------------------- baseline
 
 def test_baseline_round_trip(tmp_path):

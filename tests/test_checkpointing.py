@@ -1,0 +1,326 @@
+"""Crash-safe search checkpointing (repro.core.checkpointing +
+repro.core.durable_io + the repro.training.checkpoint unification).
+
+Fast-lane coverage:
+  (a) durable_io primitives — checksummed write/read round-trip, every
+      corruption mode raises ``CorruptFileError``, torn tmp files are
+      swept, pytree flatten/unflatten/digest round-trips;
+  (b) SearchState serialization round-trip including beacon parameter
+      trees and the digest verification;
+  (c) SearchStore — save/load/generations/discard/keep-pruning, fallback
+      past a corrupt newest checkpoint, and the key/settings mismatch
+      errors;
+  (d) in-process resume parity: a search interrupted at an arbitrary
+      generation resumes to a bit-identical final front (the subprocess
+      SIGKILL variants live in test_kill_resume.py, slow lane);
+  (e) training-checkpoint durability: manifest checksums verify on
+      restore, corruption raises instead of loading garbage.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import checkpointing as ckpt
+from repro.core import durable_io as dio
+from repro.core import sru_experiment as X
+from repro.core.api import SearchSession
+from repro.core.nsga2 import Individual
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return X.train_small_sru(steps=40)
+
+
+# ------------------------------------------------------------ durable_io
+
+def test_checksummed_round_trip(tmp_path):
+    p = str(tmp_path / "blob.ckpt")
+    payload = b"\x00\x01payload\xffbytes" * 100
+    dio.write_checksummed(p, payload)
+    assert dio.read_checksummed(p) == payload
+
+
+@pytest.mark.parametrize("mangle", [
+    lambda b: b[:-3],                               # truncated payload
+    lambda b: b"garbage header\n" + b.split(b"\n", 1)[1],   # bad magic
+    lambda b: b.replace(b"payload", b"pAyload", 1),  # flipped bits
+    lambda b: b"",                                   # empty file
+])
+def test_checksummed_corruption_raises(tmp_path, mangle):
+    p = str(tmp_path / "blob.ckpt")
+    dio.write_checksummed(p, b"payload" * 50)
+    with open(p, "rb") as f:
+        raw = f.read()
+    with open(p, "wb") as f:
+        f.write(mangle(raw))
+    with pytest.raises(dio.CorruptFileError):
+        dio.read_checksummed(p)
+
+
+def test_atomic_write_and_tmp_sweep(tmp_path):
+    p = str(tmp_path / "f.json")
+    dio.atomic_write_bytes(p, b"v1")
+    dio.atomic_write_bytes(p, b"v2")
+    assert open(p, "rb").read() == b"v2"
+    # a dead writer's torn tmp file is swept, the real file untouched
+    torn = str(tmp_path / "f.json.tmp-99999")
+    open(torn, "wb").write(b"torn")
+    assert dio.sweep_tmp_files(str(tmp_path)) == 1
+    assert not os.path.exists(torn)
+    assert open(p, "rb").read() == b"v2"
+
+
+def test_tree_flatten_digest_round_trip(trained):
+    flat = dio.flatten_tree(trained.params)
+    assert flat and all(isinstance(k, str) for k in flat)
+    rebuilt = dio.unflatten_like(trained.params, {
+        k: np.asarray(v) for k, v in flat.items()})
+    assert dio.tree_digest(rebuilt) == dio.tree_digest(trained.params)
+    # digests react to any leaf change
+    k0 = sorted(flat)[0]
+    mutated = dict(flat)
+    mutated[k0] = np.asarray(mutated[k0]) + 1
+    assert dio.tree_digest(dio.unflatten_like(trained.params, mutated)) \
+        != dio.tree_digest(trained.params)
+
+
+# ------------------------------------------------------- (de)serialization
+
+def _toy_state(trained, with_beacons=False):
+    rng = np.random.default_rng(0)
+    L = len(list(trained.layer_names))
+    inds = [Individual(rng.integers(0, 4, 2 * L),
+                       np.asarray([50.0 + i, 3.0], float), 0.0, i % 2,
+                       float(i))
+            for i in range(5)]
+    memo = {(("l0", (4, 8)),): 42.5, (("l0", (2, 2)),): float("nan")}
+    state = ckpt.SearchState(
+        next_gen=3, population=inds, history=list(inds), n_cache_hits=2,
+        memo=memo, memo_hits=1, n_error_evals=7,
+        quarantine_log=[{"alloc": {"l0": [2, 2]}, "raw_error": None,
+                         "action": "quarantined"}],
+        n_quarantined=1, front_idx=[0, 2])
+    if with_beacons:
+        alloc = {n: (4, 8) for n in trained.layer_names}
+        state.beacon_allocs = [alloc]
+        state.beacon_params = [trained.params]
+        state.beacon_digests = [dio.tree_digest(trained.params)]
+        state.n_retrains = 1
+    return state
+
+
+def test_state_round_trip(trained):
+    key = ckpt.search_key(trained, _mem_only(), 0)
+    settings = {"generations": 4}
+    st = _toy_state(trained, with_beacons=True)
+    payload = ckpt.serialize_state(st, key, settings)
+    back, manifest = ckpt.deserialize_state(payload,
+                                            params_template=trained.params)
+    assert manifest["key"] == key and manifest["settings"] == settings
+    assert back.next_gen == 3 and back.n_cache_hits == 2
+    assert back.memo_hits == 1 and back.n_error_evals == 7
+    assert back.front_idx == [0, 2] and back.n_retrains == 1
+    assert len(back.population) == len(st.population)
+    for a, b in zip(st.population, back.population):
+        assert np.array_equal(a.genome, b.genome)
+        assert np.array_equal(a.objectives, b.objectives)
+        assert (a.violation, a.rank, a.crowding) == \
+            (b.violation, b.rank, b.crowding)
+    # NaN memo values survive the JSON manifest
+    same = {k: v for k, v in back.memo.items()}
+    assert same[(("l0", (4, 8)),)] == 42.5
+    assert np.isnan(same[(("l0", (2, 2)),)])
+    assert back.beacon_allocs == st.beacon_allocs
+    assert dio.tree_digest(back.beacon_params[0]) == st.beacon_digests[0]
+
+
+def test_deserialize_requires_template_for_beacons(trained):
+    st = _toy_state(trained, with_beacons=True)
+    payload = ckpt.serialize_state(st, {}, {})
+    with pytest.raises((ckpt.CheckpointMismatchError, dio.CorruptFileError)):
+        ckpt.deserialize_state(payload, params_template=None)
+
+
+def test_deserialize_rejects_garbage():
+    with pytest.raises(dio.CorruptFileError):
+        ckpt.deserialize_state(b"not an npz at all")
+
+
+# ------------------------------------------------------------ SearchStore
+
+def _mem_only():
+    from repro.core.hardware import get_platform
+    return get_platform("mem-only")
+
+
+def test_store_save_load_discard_keep(tmp_path, trained):
+    store = ckpt.SearchStore(str(tmp_path), keep=2)
+    key = ckpt.search_key(trained, _mem_only(), 0)
+    settings = {"generations": 9}
+    for g in (0, 1, 2, 3):
+        st = _toy_state(trained)
+        st.next_gen = g
+        store.save(key, settings, st)
+    # keep=2 pruned the oldest
+    assert store.generations(key, settings) == [2, 3]
+    got = store.load_latest(key, settings)
+    assert got is not None and got.next_gen == 3
+    assert store.discard_after(key, settings, 2) == 1
+    assert store.load_latest(key, settings).next_gen == 2
+    # KEY/SETTINGS sidecars record the address in the clear
+    d = store.dir_for(key, settings)
+    assert json.loads(open(os.path.join(
+        os.path.dirname(d), "KEY.json")).read()) == key
+    assert json.loads(open(os.path.join(
+        d, "SETTINGS.json")).read()) == settings
+
+
+def test_store_falls_back_past_corrupt_newest(tmp_path, trained):
+    store = ckpt.SearchStore(str(tmp_path))
+    key = ckpt.search_key(trained, _mem_only(), 0)
+    settings = {}
+    for g in (0, 1):
+        st = _toy_state(trained)
+        st.next_gen = g
+        store.save(key, settings, st)
+    newest = os.path.join(store.dir_for(key, settings), "gen_00001.ckpt")
+    with open(newest, "r+b") as f:
+        f.truncate(40)
+    with pytest.warns(RuntimeWarning, match="corrupt checkpoint"):
+        got = store.load_latest(key, settings)
+    assert got is not None and got.next_gen == 0
+
+
+def test_store_empty_returns_none(tmp_path, trained):
+    store = ckpt.SearchStore(str(tmp_path))
+    key = ckpt.search_key(trained, _mem_only(), 0)
+    assert store.load_latest(key, {}) is None
+    assert store.generations(key, {}) == []
+
+
+def test_store_mismatch_raises_not_skips(tmp_path, trained):
+    store = ckpt.SearchStore(str(tmp_path))
+    key = ckpt.search_key(trained, _mem_only(), 0)
+    settings = {"generations": 9}
+    store.save(key, settings, _toy_state(trained))
+    # forge a directory collision: copy the checkpoint under the hash dirs
+    # of a DIFFERENT (key, settings) pair, as if the hash were attacked or
+    # the store mispopulated — the loader must refuse, not silently resume
+    other = dict(key, seed=99)
+    src = store.dir_for(key, settings)
+    dst = store.dir_for(other, settings)
+    os.makedirs(dst)
+    for name in os.listdir(src):
+        if name.endswith(".ckpt"):
+            with open(os.path.join(src, name), "rb") as f:
+                data = f.read()
+            with open(os.path.join(dst, name), "wb") as f:
+                f.write(data)
+    with pytest.raises(ckpt.CheckpointMismatchError):
+        store.load_latest(other, settings)
+
+
+def test_search_key_separates_identities(trained):
+    hw = _mem_only()
+    k1 = ckpt.search_key(trained, hw, 0)
+    assert k1 == ckpt.search_key(trained, hw, 0)      # deterministic
+    assert k1 != ckpt.search_key(trained, hw, 1)       # seed
+    k_sram = ckpt.search_key(trained, hw, 0, sram_bytes=12345)
+    assert k_sram["sram_bytes"] == 12345 and k1 != k_sram
+    assert k1["sram_bytes"] is None                    # mem-only: unbounded
+
+
+# ------------------------------------------------------ resume parity
+
+def test_resume_parity_in_process(tmp_path, trained):
+    """Reference run vs checkpoint-every-generation run vs a run resumed
+    from generation 1 with a cold memo: all three fronts identical by
+    ``==`` (the SeedSequence spawn-index discipline, exercised through the
+    public SearchSession surface)."""
+    kw = dict(generations=3, pop=6, initial=8, seed=0)
+
+    def session():
+        return SearchSession(trained, "mem-only", ("error", "memory"),
+                             share_memo=False)
+
+    ref = session().run(**kw)
+    d = str(tmp_path / "store")
+    full = session().run(checkpoint_dir=d, **kw)
+    assert full.front_key() == ref.front_key()
+    assert full.n_evals == ref.n_evals
+
+    key = ckpt.search_key(trained, _mem_only(), 0)
+    settings = {"generations": 3, "pop": 6, "initial": 8,
+                "objectives": ["error", "memory"], "beacons": False,
+                "retrain_steps": 0, "distance_threshold": 0.0}
+    store = ckpt.SearchStore(d)
+    assert store.generations(key, settings) == [0, 1, 2, 3]
+    store.discard_after(key, settings, 1)
+
+    lines = []
+    res = session().run(checkpoint_dir=d, resume=True, log=lines.append,
+                        **kw)
+    assert any("resumed from checkpoint" in l for l in lines)
+    assert res.front_key() == ref.front_key()
+    assert res.n_evals == ref.n_evals
+    # the resumed run re-writes the tail it replayed
+    assert store.generations(key, settings) == [0, 1, 2, 3]
+
+
+def test_resume_without_dir_raises(trained):
+    with pytest.raises(ValueError):
+        SearchSession(trained, "mem-only", ("error", "memory")).run(
+            generations=1, resume=True)
+
+
+def test_resume_with_empty_store_runs_fresh(tmp_path, trained):
+    kw = dict(generations=2, pop=6, initial=8, seed=0)
+    ref = SearchSession(trained, "mem-only", ("error", "memory"),
+                        share_memo=False).run(**kw)
+    res = SearchSession(trained, "mem-only", ("error", "memory"),
+                        share_memo=False).run(
+        checkpoint_dir=str(tmp_path / "empty"), resume=True, **kw)
+    assert res.front_key() == ref.front_key()
+
+
+def test_checkpoint_every_thins_saves(tmp_path, trained):
+    d = str(tmp_path / "store")
+    SearchSession(trained, "mem-only", ("error", "memory"),
+                  share_memo=False).run(
+        generations=4, pop=6, initial=8, seed=0,
+        checkpoint_dir=d, checkpoint_every=2)
+    key = ckpt.search_key(trained, _mem_only(), 0)
+    settings = {"generations": 4, "pop": 6, "initial": 8,
+                "objectives": ["error", "memory"], "beacons": False,
+                "retrain_steps": 0, "distance_threshold": 0.0}
+    # every 2nd generation plus the final one
+    assert ckpt.SearchStore(d).generations(key, settings) == [0, 2, 4]
+
+
+# ------------------------------------------- training checkpoint durability
+
+def test_training_checkpoint_checksum_round_trip(tmp_path, trained):
+    from repro.training import checkpoint as tc
+    d = str(tmp_path / "train")
+    tc.save(d, 7, trained.params)
+    manifest = json.load(open(os.path.join(d, "step_00000007",
+                                           "manifest.json")))
+    assert "checksums" in manifest and "arrays.npz" in manifest["checksums"]
+    restored, step = tc.restore(d, trained.params)
+    assert step == 7
+    assert dio.tree_digest(restored) == dio.tree_digest(trained.params)
+
+
+def test_training_checkpoint_corruption_raises(tmp_path, trained):
+    from repro.training import checkpoint as tc
+    d = str(tmp_path / "train")
+    tc.save(d, 1, trained.params)
+    arrays = os.path.join(d, "step_00000001", "arrays.npz")
+    with open(arrays, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad\xbe\xef")
+    with pytest.raises(dio.CorruptFileError):
+        tc.restore(d, trained.params)

@@ -1,0 +1,217 @@
+"""Deterministic fault injection + graceful evaluator degradation
+(repro.core.faults wired through PopulationEvaluator and the search's
+NaN/Inf quarantine).
+
+Covers: seeded schedules reproduce bit-for-bit; poisoned lanes never
+perturb clean lanes; bounded retry absorbs transient dispatch failures
+and re-raises past the budget; a full search quarantines non-finite
+errors (worst-case objectives, excluded from feasible fronts) and keeps
+every clean evaluation bit-identical to an unfaulted search. The 8-device
+mesh-shrink (device loss) parity test lives in test_kill_resume.py's
+subprocess, next to the other 8-way assertions.
+"""
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core import sru_experiment as X
+from repro.core.api import SearchSession
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return X.train_small_sru(steps=40)
+
+
+@pytest.fixture(scope="module")
+def allocs(trained):
+    rng = np.random.default_rng(7)
+    menu = trained.menu
+    return [{n: (int(rng.choice(menu)), int(rng.choice(menu)))
+             for n in trained.layer_names} for _ in range(12)]
+
+
+@pytest.fixture(scope="module")
+def clean(trained, allocs):
+    ev = trained.batched_evaluator(use_banks=True)
+    return ev.errors(allocs, trained.params)
+
+
+def _fresh_evaluator(trained):
+    """A private evaluator instance: ``batched_evaluator`` caches by
+    config, and fault state must never leak between tests."""
+    ev = trained.batched_evaluator(use_banks=True)
+    ev.faults = None
+    ev.fault_log = []
+    ev.max_retries = 3
+    ev.retry_backoff_s = 0.001
+    return ev
+
+
+# ------------------------------------------------------------- schedules
+
+def test_schedule_fires_at_exact_indices():
+    inj = F.FaultInjector(policies=[F.FailDispatch(at=2, times=2),
+                                    F.LoseDevices(at=5, keep=4)])
+    fired = []
+    for _ in range(6):
+        try:
+            inj.on_dispatch(None)
+            fired.append(None)
+        except F.TransientDispatchError:
+            fired.append("transient")
+        except F.DeviceLossError as e:
+            fired.append(("loss", e.keep))
+    assert fired == [None, "transient", "transient", None, ("loss", 4),
+                     None]
+    assert [e["event"] for e in inj.log] == \
+        ["fail_dispatch", "fail_dispatch", "lose_devices"]
+
+
+def test_poison_lane_draw_is_seed_deterministic():
+    errs = np.arange(20.0)
+    draws = []
+    for _ in range(2):
+        inj = F.FaultInjector(policies=[F.PoisonLanes(at=1, n_lanes=4)],
+                              seed=11)
+        out = inj.on_result(None, errs.copy())
+        draws.append((inj.log[0]["lanes"], out.copy()))
+    assert draws[0][0] == draws[1][0]
+    assert np.array_equal(draws[0][1], draws[1][1], equal_nan=True)
+    other = F.FaultInjector(policies=[F.PoisonLanes(at=1, n_lanes=4)],
+                            seed=12)
+    other.on_result(None, errs.copy())
+    assert other.log[0]["lanes"] != draws[0][0]
+
+
+def test_poison_explicit_lanes_and_value():
+    inj = F.FaultInjector(policies=[F.PoisonLanes(
+        at=1, lanes=(0, 3), value=float("inf"))])
+    out = inj.on_result(None, np.arange(5.0))
+    assert np.isinf(out[0]) and np.isinf(out[3])
+    assert out[1] == 1.0 and out[2] == 2.0 and out[4] == 4.0
+
+
+# --------------------------------------------------- evaluator degradation
+
+def test_poison_isolation_on_evaluator(trained, allocs, clean):
+    ev = _fresh_evaluator(trained)
+    ev.faults = F.FaultInjector(policies=[F.PoisonLanes(at=1, n_lanes=3)],
+                                seed=11)
+    got = ev.errors(allocs, trained.params)
+    lanes = ev.faults.log[0]["lanes"]
+    assert len(lanes) == 3
+    for i, (c, g) in enumerate(zip(clean, got)):
+        if i in lanes:
+            assert np.isnan(g)
+        else:
+            assert c == g, f"clean lane {i} was perturbed"
+    ev.faults = None
+
+
+def test_retry_absorbs_transients_bit_identically(trained, allocs, clean):
+    ev = _fresh_evaluator(trained)
+    ev.faults = F.FaultInjector(policies=[F.FailDispatch(at=1, times=2)])
+    assert ev.errors(allocs, trained.params) == clean
+    retries = [e for e in ev.fault_log if e["event"] == "retry"]
+    assert [r["attempt"] for r in retries] == [1, 2]
+    assert retries[1]["delay_s"] > retries[0]["delay_s"]   # backoff grows
+    ev.faults = None
+
+
+def test_retry_budget_exhaustion_reraises(trained, allocs):
+    ev = _fresh_evaluator(trained)
+    ev.faults = F.FaultInjector(policies=[F.FailDispatch(at=1, times=9)])
+    with pytest.raises(F.TransientDispatchError):
+        ev.errors(allocs, trained.params)
+    assert sum(e["event"] == "retry" for e in ev.fault_log) \
+        == ev.max_retries
+    ev.faults = None
+
+
+def test_device_loss_without_mesh_is_an_error(trained, allocs):
+    ev = _fresh_evaluator(trained)
+    ev.faults = F.FaultInjector(policies=[F.LoseDevices(at=1, keep=4)])
+    with pytest.raises(RuntimeError, match="no mesh to shrink"):
+        ev.errors(allocs, trained.params)
+    ev.faults = None
+
+
+def test_shrink_mesh_validates():
+    from repro.distributed import pop_sharding
+    import jax
+    mesh = pop_sharding.make_pop_mesh(jax.devices()[:1]) \
+        if hasattr(pop_sharding, "make_pop_mesh") else None
+    if mesh is None:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()[:1]), (pop_sharding.POP_AXIS,))
+    with pytest.raises(ValueError):
+        pop_sharding.shrink_mesh(mesh, 1)      # must strictly shrink
+    with pytest.raises(ValueError):
+        pop_sharding.shrink_mesh(mesh, 0)
+
+
+# ------------------------------------------------------------- quarantine
+
+@pytest.fixture(scope="module")
+def poisoned_and_clean_search():
+    def run(poison):
+        t = X.train_small_sru(steps=40)
+        ev = t.batched_evaluator(use_banks=True)
+        ev.faults = F.FaultInjector(
+            policies=[F.PoisonLanes(at=1, n_lanes=2),
+                      F.PoisonLanes(at=3, n_lanes=1, value=float("inf"))],
+            seed=5) if poison else None
+        s = SearchSession(t, "mem-only", ("error", "memory"))
+        res = s.run(generations=3, pop=6, initial=8, seed=0)
+        ev.faults = None
+        return res
+    return run(False), run(True)
+
+
+def test_quarantine_flags_and_logs(poisoned_and_clean_search):
+    _, res = poisoned_and_clean_search
+    prob = res.problem
+    assert prob.n_quarantined >= 1
+    assert len(prob.quarantine_log) == prob.n_quarantined
+    for rec in prob.quarantine_log:
+        assert not np.isfinite(rec["raw_error"])
+        assert "alloc" in rec and "action" in rec
+
+
+def test_quarantined_never_reach_feasible_front(poisoned_and_clean_search):
+    _, res = poisoned_and_clean_search
+    assert len(res.pareto) >= 1          # the search still produced a front
+    for ind in res.pareto:
+        assert np.isfinite(ind.objectives).all()
+        assert ind.violation == 0.0
+
+
+def test_quarantine_does_not_perturb_clean_lanes(poisoned_and_clean_search):
+    clean, res = poisoned_and_clean_search
+    mc, mp = clean.problem.error_memo, res.problem.error_memo
+    shared = set(mc) & set(mp)
+    assert len(shared) >= 5
+    diff = [k for k in shared if mc[k] != mp[k]
+            and not (np.isnan(mc[k]) and np.isnan(mp[k]))]
+    # only quarantined entries may differ, and they differ by being inf
+    assert len(diff) <= res.problem.n_quarantined
+    for k in diff:
+        assert not np.isfinite(mp[k])
+
+
+def test_quarantine_memo_dedup():
+    """Re-encountering a quarantined allocation must not double-log."""
+    from repro.core.mohaq import MOHAQProblem
+    from repro.core.hardware import get_platform
+    prob = MOHAQProblem(
+        layer_names=["a"], layer_macs={"a": 10}, layer_weights={"a": 10},
+        vector_weights=4, hardware=get_platform("mem-only"),
+        error_fn=lambda alloc: float("nan"), baseline_error=10.0,
+        objectives=("error", "memory"))
+    alloc = {"a": (2, 2)}
+    e1 = prob.evaluate(prob.encode(alloc))
+    e2 = prob.evaluate(prob.encode(alloc))
+    assert prob.n_quarantined == 1
+    assert np.isinf(e1[0][0]) and np.isinf(e2[0][0])
+    assert e1[1] == e2[1] == prob.QUARANTINE_VIOLATION

@@ -1,0 +1,277 @@
+"""Kill-and-resume: the crash-safety contract proven across real process
+boundaries (slow lane).
+
+Choreography (one subprocess per lifecycle stage, module-scoped so the
+processes are paid for once per scenario):
+
+  reference   a search runs to completion with checkpointing on; its
+              final front is the ground truth.
+  SIGKILL     a second process running the identical search is killed
+              mid-search — either right after committing generation K's
+              checkpoint (``REPRO_TEST_KILL_AFTER_GEN``, the "power cut
+              between generations" case) or in the middle of a
+              checkpoint write with the tmp file on disk and the rename
+              never issued (``REPRO_CKPT_CRASH_AFTER_TMP``, the torn-
+              write case).
+  resume      a third process resumes from whatever the dead one left
+              behind and must finish with a front EQUAL (``==``) to the
+              reference, same total evals — and for the beacon variant,
+              the same retrain count with the pre-kill retrains restored
+              from disk rather than re-run.
+
+The beacon scenario's fault line crosses the retraining stream: some
+retrains happen before the kill (their parameters must come back from the
+checkpoint bit-identically — digests are verified on load) and some after
+(the resumed data stream must fast-forward so the (N+1)-th retrain sees
+the exact batches the uninterrupted run would).
+
+An 8-virtual-device subprocess additionally proves the device-loss
+degradation path: a mid-search ``LoseDevices`` rebinds the evaluator from
+8 to 4 shards and every real lane's error stays bit-identical.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DRIVER = textwrap.dedent("""
+    import json, os, signal
+
+    from repro.core import checkpointing as ckpt
+    from repro.core import sru_experiment as X
+    from repro.core.api import SearchSession
+
+    mode = os.environ["REPRO_TEST_MODE"]                 # run | resume
+    beacons = os.environ.get("REPRO_TEST_BEACONS") == "1"
+    store_dir = os.environ["REPRO_TEST_STORE"]
+    kill_after = int(os.environ.get("REPRO_TEST_KILL_AFTER_GEN", -1))
+
+    if kill_after >= 0:
+        # commit generation ``kill_after``'s checkpoint, then die the way
+        # a power cut does: no exception, no cleanup, no atexit
+        real_save = ckpt.SearchStore.save
+        def save_then_die(self, key, settings, state, **kw):
+            path = real_save(self, key, settings, state, **kw)
+            if state.next_gen == kill_after:
+                os.kill(os.getpid(), signal.SIGKILL)
+            return path
+        ckpt.SearchStore.save = save_then_die
+
+    if beacons:
+        trained = X.train_small_sru(steps=60)
+        sram = int((sum(trained.layer_weights.values()) * 8.0
+                    + trained.vector_weights * 16) / 8)
+        session = SearchSession(trained, "bitfusion", ("error", "speedup"),
+                                sram_override=sram)
+        kw = dict(generations=4, pop=6, initial=8, seed=0, beacons=True,
+                  retrain_steps=3, distance_threshold=2.0)
+    else:
+        trained = X.train_small_sru(steps=40)
+        session = SearchSession(trained, "mem-only", ("error", "memory"))
+        kw = dict(generations=3, pop=6, initial=8, seed=0)
+
+    lines = []
+    res = session.run(checkpoint_dir=store_dir, resume=(mode == "resume"),
+                      log=lines.append, **kw)
+    print("RESULT " + json.dumps({
+        "front": res.front_key(),
+        "n_evals": res.n_evals,
+        "n_retrains": (res.beacon_search.n_retrains
+                       if res.beacon_search else 0),
+        "resumed": any("resumed from checkpoint" in l for l in lines),
+    }))
+""")
+
+
+def _spawn(store, mode, *, beacons=False, kill_after_gen=None,
+           crash_after_tmp=None, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["REPRO_TEST_MODE"] = mode
+    env["REPRO_TEST_BEACONS"] = "1" if beacons else "0"
+    env["REPRO_TEST_STORE"] = store
+    env.pop("REPRO_CKPT_CRASH_AFTER_TMP", None)
+    if kill_after_gen is not None:
+        env["REPRO_TEST_KILL_AFTER_GEN"] = str(kill_after_gen)
+    if crash_after_tmp is not None:
+        env["REPRO_CKPT_CRASH_AFTER_TMP"] = str(crash_after_tmp)
+    return subprocess.run([sys.executable, "-c", DRIVER], env=env,
+                          capture_output=True, text=True, timeout=timeout,
+                          cwd=REPO)
+
+
+def _result(proc):
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def _assert_sigkilled(proc):
+    assert proc.returncode == -signal.SIGKILL, (
+        f"expected SIGKILL death, got rc={proc.returncode}\n"
+        + proc.stderr[-2000:])
+    assert not any(l.startswith("RESULT ")
+                   for l in proc.stdout.splitlines())
+
+
+def _ckpt_files(store):
+    out = []
+    for dirpath, _, names in os.walk(store):
+        out += [os.path.join(dirpath, n) for n in names]
+    return out
+
+
+# ----------------------------------------------------------- plain search
+
+@pytest.fixture(scope="module")
+def plain(tmp_path_factory):
+    root = tmp_path_factory.mktemp("kill_resume_plain")
+    ref = _result(_spawn(str(root / "ref"), "run"))
+
+    killed_dir = str(root / "killed")
+    killed = _spawn(killed_dir, "run", kill_after_gen=1)
+    resumed = _result(_spawn(killed_dir, "resume"))
+
+    torn_dir = str(root / "torn")
+    # write_checksummed calls: gen 0 save is the 1st -> die on the 3rd,
+    # torn tmp for generation 2's checkpoint, gens 0-1 committed
+    torn = _spawn(torn_dir, "run", crash_after_tmp=3)
+    torn_leftovers = [p for p in _ckpt_files(torn_dir) if ".tmp-" in p]
+    torn_resumed = _result(_spawn(torn_dir, "resume"))
+
+    return dict(ref=ref, killed=killed, resumed=resumed, torn=torn,
+                torn_dir=torn_dir, torn_leftovers=torn_leftovers,
+                torn_resumed=torn_resumed)
+
+
+@pytest.mark.slow
+class TestPlainKillResume:
+    def test_reference_completed(self, plain):
+        assert plain["ref"]["front"] and not plain["ref"]["resumed"]
+
+    def test_children_really_died_by_sigkill(self, plain):
+        _assert_sigkilled(plain["killed"])
+        _assert_sigkilled(plain["torn"])
+
+    def test_resume_after_midsearch_kill_is_bit_identical(self, plain):
+        assert plain["resumed"]["resumed"]
+        assert plain["resumed"]["front"] == plain["ref"]["front"]
+        assert plain["resumed"]["n_evals"] == plain["ref"]["n_evals"]
+
+    def test_torn_write_left_tmp_then_resume_is_bit_identical(self, plain):
+        assert plain["torn_leftovers"], \
+            "the torn-write kill should leave a .tmp- file behind"
+        assert plain["torn_resumed"]["resumed"]
+        assert plain["torn_resumed"]["front"] == plain["ref"]["front"]
+        assert plain["torn_resumed"]["n_evals"] == plain["ref"]["n_evals"]
+        # the resume swept the dead writer's tmp file
+        assert not any(".tmp-" in p for p in _ckpt_files(plain["torn_dir"]))
+
+
+# ---------------------------------------------------------- beacon search
+
+@pytest.fixture(scope="module")
+def beacon(tmp_path_factory):
+    root = tmp_path_factory.mktemp("kill_resume_beacon")
+    ref = _result(_spawn(str(root / "ref"), "run", beacons=True))
+
+    killed_dir = str(root / "killed")
+    killed = _spawn(killed_dir, "run", beacons=True, kill_after_gen=2)
+    # what the dead process managed to persist (retrains at the cut)
+    from repro.core import checkpointing as ckpt
+    from repro.core import sru_experiment as X
+    trained = X.train_small_sru(steps=60)
+    sram = int((sum(trained.layer_weights.values()) * 8.0
+                + trained.vector_weights * 16) / 8)
+    from repro.core.hardware import get_platform
+    key = ckpt.search_key(trained, get_platform("bitfusion"), 0,
+                          sram_bytes=sram)
+    settings = {"generations": 4, "pop": 6, "initial": 8,
+                "objectives": ["error", "speedup"], "beacons": True,
+                "retrain_steps": 3, "distance_threshold": 2.0}
+    mid = ckpt.SearchStore(killed_dir).load_latest(
+        key, settings, params_template=trained.params)
+    resumed = _result(_spawn(killed_dir, "resume", beacons=True))
+    return dict(ref=ref, killed=killed, mid=mid, resumed=resumed)
+
+
+@pytest.mark.slow
+class TestBeaconKillResume:
+    def test_reference_actually_retrains(self, beacon):
+        assert beacon["ref"]["n_retrains"] >= 2
+
+    def test_child_died_with_retrains_on_disk(self, beacon):
+        _assert_sigkilled(beacon["killed"])
+        mid = beacon["mid"]
+        assert mid is not None and mid.next_gen == 2
+        # the kill must land BETWEEN retrains, or the fast-forward path
+        # isn't exercised
+        assert 0 < mid.n_retrains < beacon["ref"]["n_retrains"]
+        assert len(mid.beacon_params) == mid.n_retrains
+        assert len(mid.beacon_digests) == mid.n_retrains
+
+    def test_beacon_resume_is_bit_identical(self, beacon):
+        assert beacon["resumed"]["resumed"]
+        assert beacon["resumed"]["front"] == beacon["ref"]["front"]
+        assert beacon["resumed"]["n_evals"] == beacon["ref"]["n_evals"]
+        assert beacon["resumed"]["n_retrains"] == \
+            beacon["ref"]["n_retrains"]
+
+
+# ------------------------------------------------- device-loss degradation
+
+MESH_SCRIPT = textwrap.dedent("""
+    import json
+    import numpy as np
+    from repro.core import sru_experiment as X
+    from repro.core import faults as F
+    from repro.launch import mesh as launch_mesh
+
+    trained = X.train_small_sru(steps=40)
+    rng = np.random.default_rng(7)
+    menu = trained.menu
+    allocs = [{n: (int(rng.choice(menu)), int(rng.choice(menu)))
+               for n in trained.layer_names} for _ in range(12)]
+
+    clean = trained.batched_evaluator(use_banks=True).errors(
+        allocs, trained.params)
+
+    m = launch_mesh.make_population_mesh()
+    ev = trained.batched_evaluator(use_banks=True, mesh=m)
+    ev.faults = F.FaultInjector(policies=[F.LoseDevices(at=2, keep=4)])
+    first = ev.errors(allocs, trained.params)    # dispatch 1: 8 shards
+    second = ev.errors(allocs, trained.params)   # dispatch 2: loses 4
+    print("RESULT " + json.dumps({
+        "n_devices": int(m.devices.size),
+        "first_equal": first == clean,
+        "second_equal": second == clean,
+        "shards_after": int(ev._n_shards),
+        "loss_logged": ev.fault_log[-1],
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_device_loss_parity_under_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    res = json.loads(line[len("RESULT "):])
+    assert res["n_devices"] == 8
+    assert res["first_equal"] and res["second_equal"]
+    assert res["shards_after"] == 4
+    assert res["loss_logged"] == {"event": "device_loss",
+                                  "from_shards": 8, "to_shards": 4}

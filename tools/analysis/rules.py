@@ -22,6 +22,14 @@ R5  Parity-frozen dtypes — no ``jnp.float64`` / ``dtype="float64"`` /
     search rests on (models/sru.py, core/quantization.py,
     core/batched_eval.py, kernels/). Host-side numpy f64 math is exempt —
     the evaluator's count->percent division deliberately uses it.
+R6  Swallowed exceptions — no bare ``except:`` and no
+    ``except Exception/BaseException`` whose body only passes (pass /
+    ``...`` / continue) under core/, distributed/, or kernels/. The
+    crash-safety work (checkpoint/resume + fault injection) depends on
+    failures PROPAGATING so the retry/degradation paths see them; a
+    silent handler turns an injected fault into a wrong answer. Retry
+    sites must name the exception types they absorb
+    (``faults.TRANSIENT_DISPATCH_ERRORS`` is the sanctioned tuple).
 """
 from __future__ import annotations
 
@@ -290,5 +298,66 @@ class ParityDtypeRule(Rule):
                                     "contracts were frozen under")
 
 
+def _handler_names(handler: ast.ExceptHandler) -> List[str]:
+    """Exception class names a handler catches (empty for bare except)."""
+    t = handler.type
+    if t is None:
+        return []
+    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+    names = []
+    for e in elts:
+        if isinstance(e, ast.Name):
+            names.append(e.id)
+        elif isinstance(e, ast.Attribute):
+            names.append(e.attr)
+    return names
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body does nothing but suppress: only pass,
+    ``...`` or continue statements (logging/re-raising/recovery bodies are
+    fine)."""
+    for stmt in handler.body:
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant) \
+                and stmt.value.value is Ellipsis:
+            continue
+        return False
+    return True
+
+
+class SwallowedExceptionRule(Rule):
+    id = "R6"
+    doc = ("bare/blanket exception handlers that swallow failures in "
+           "crash-safety-critical modules")
+
+    _SCOPE = ("repro/core/", "repro/distributed/", "repro/kernels/")
+    _BLANKET = {"Exception", "BaseException"}
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        return any(frag in ctx.path for frag in self._SCOPE)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            names = _handler_names(node)
+            if node.type is None:
+                yield self.finding(
+                    ctx, node,
+                    "bare `except:` catches everything (KeyboardInterrupt, "
+                    "injected faults, ...); name the exception types — the "
+                    "degradation paths need failures to propagate")
+            elif self._BLANKET & set(names) and _swallows(node):
+                caught = next(iter(self._BLANKET & set(names)))
+                yield self.finding(
+                    ctx, node,
+                    f"`except {caught}` with a pass-only body silently "
+                    "swallows failures (including injected faults); name "
+                    "the types and handle or re-raise")
+
+
 ALL_RULES = (GlobalRNGRule(), DeprecatedEntrypointRule(),
-             HostSideEffectRule(), RetraceHazardRule(), ParityDtypeRule())
+             HostSideEffectRule(), RetraceHazardRule(), ParityDtypeRule(),
+             SwallowedExceptionRule())

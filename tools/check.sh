@@ -23,8 +23,15 @@
 #   0. api smoke   — import + public-name check of the repro.core.api
 #                    SearchTarget/SearchSession surface and the platform
 #                    registry (runs before the fast lane)
+#   0b. resilience — crash-safety smoke chained after the api stage: a
+#                    tiny checkpointed search, discard the newest
+#                    checkpoints, resume, and assert the resumed Pareto
+#                    front is bit-identical (==) to the uninterrupted
+#                    run (the full kill/torn-write matrix is the slow
+#                    lane's test_kill_resume.py)
 #
-# Usage: tools/check.sh [analyze|api|fast|slow|bench]  (no argument = all)
+# Usage: tools/check.sh [analyze|api|resilience|fast|slow|bench]
+#        (no argument = all)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -71,6 +78,42 @@ print("api surface OK:", ", ".join(sorted(api.__all__)))
 PY
 }
 
+run_resilience() {
+  echo "== resilience smoke: checkpoint -> discard tail -> resume -> front == =="
+  python - <<'PY'
+import tempfile
+
+from repro.core import checkpointing as ckpt
+from repro.core import sru_experiment as X
+from repro.core.api import SearchSession
+from repro.core.hardware import get_platform
+
+trained = X.train_small_sru(steps=40)
+kw = dict(generations=3, pop=6, initial=8, seed=0)
+
+def session():
+    return SearchSession(trained, "mem-only", ("error", "memory"),
+                         share_memo=False)
+
+with tempfile.TemporaryDirectory() as d:
+    ref = session().run(**kw)
+    full = session().run(checkpoint_dir=d, **kw)
+    assert full.front_key() == ref.front_key(), "checkpointing changed the front"
+    key = ckpt.search_key(trained, get_platform("mem-only"), 0)
+    settings = {"generations": 3, "pop": 6, "initial": 8,
+                "objectives": ["error", "memory"], "beacons": False,
+                "retrain_steps": 0, "distance_threshold": 0.0}
+    store = ckpt.SearchStore(d)
+    gens = store.generations(key, settings)
+    assert gens == [0, 1, 2, 3], gens
+    store.discard_after(key, settings, 1)
+    res = session().run(checkpoint_dir=d, resume=True, **kw)
+    assert res.front_key() == ref.front_key(), "resume diverged"
+    assert res.n_evals == ref.n_evals
+print("resilience OK: resumed front bit-identical to the uninterrupted run")
+PY
+}
+
 run_fast() {
   echo "== fast lane: pytest -m 'not slow' =="
   python -m pytest -x -q -m "not slow"
@@ -89,12 +132,14 @@ run_bench() {
 
 case "$stage" in
   analyze) run_analyze ;;
-  api)   run_api_smoke ;;
-  fast)  run_api_smoke; run_fast ;;
+  api)   run_api_smoke; run_resilience ;;
+  resilience) run_resilience ;;
+  fast)  run_api_smoke; run_resilience; run_fast ;;
   slow)  run_slow ;;
   bench) run_bench ;;
-  all)   run_analyze; run_api_smoke; run_fast; run_slow; run_bench ;;
-  *)     echo "unknown stage: $stage (want analyze|api|fast|slow|bench)" >&2
+  all)   run_analyze; run_api_smoke; run_resilience; run_fast; run_slow
+         run_bench ;;
+  *)     echo "unknown stage: $stage (want analyze|api|resilience|fast|slow|bench)" >&2
          exit 2 ;;
 esac
 echo "== check.sh: all requested stages passed =="
