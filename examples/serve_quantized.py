@@ -1,10 +1,16 @@
 """Serve a small LM with MOHAQ-quantized weights through the Pallas
 quant_matmul kernel path — prefill + batched decode — and serve a whole
-*population* of quantization allocations in one dispatch.
+*population* of quantization allocations in one dispatch from a PACKED
+deployment artifact.
 
 Demonstrates the TPU adaptation of the paper (DESIGN.md): int4/int2 weights
 packed in int8 containers, dequantized in-kernel. On this CPU container the
 kernel runs in interpret mode; on TPU the same call compiles to MXU ops.
+The population-serving half goes through ``tools/convert_checkpoint.py``:
+a trained search model + its chosen allocations are frozen into a packed
+artifact (int codes + scales + manifest, >= 4x smaller than the f32 banks)
+and served via ``forward_population(banks=...)`` with no f32 weight tensor
+shipped at all — the deployment path ISSUE 8 / ROADMAP direction 2 asks for.
 
 Run: PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -84,34 +90,44 @@ def main():
     print(f"int4 kernel vs dense head: max abs err {err:.3f} (rel {rel:.3f}) "
           f"- int4 quantization noise, as expected")
 
-    # --- population serving: many allocations per dispatch ---------------
+    # --- population serving from a packed deployment artifact -------------
     # The search-loop substrate (forward_population's explicit population
-    # axis) doubles as a serving substrate: ship the whole Pareto front and
-    # score every operating point in ONE dispatch — the designer (or an
-    # SLA-aware router) picks the accuracy/latency point per request.
-    from repro.core.batched_eval import stack_qps
+    # axis) doubles as a serving substrate, and the deployment form is the
+    # PACKED artifact written by tools/convert_checkpoint.py: a trained
+    # model + chosen allocations (e.g. the Pareto front) freeze into int
+    # codes + per-grid scales — >= 4x smaller than the f32 banks, dequantized
+    # in-trace to bit-identical rows. The server then replays every
+    # operating point in ONE dispatch from the artifact alone: weights come
+    # from the containers, the manifest carries the qp grids, and the only
+    # raw parameter shipped is the FC bias. The designer (or an SLA-aware
+    # router) picks the accuracy/latency point per request.
+    import os
+    import sys
+    import tempfile
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))           # repo root for `tools.*`
+    from repro.core import sru_experiment as X
     from repro.models import sru
+    from tools import convert_checkpoint as CC
 
-    scfg = sru.SRUModelConfig(input_dim=23, hidden=64, proj=32,
-                              n_sru_layers=2, n_outputs=48)
-    sparams = sru.init_params(jax.random.PRNGKey(3), scfg)
-    feats = jax.random.normal(jax.random.PRNGKey(4), (4, 24, 23))
-    names = list(scfg.layer_names())
-    ranges = sru.calibrate(sparams, scfg, [feats])
-    wr = sru.weight_ranges(sparams, scfg)
-    wclips = {}
-    for bits in (2, 4, 8):
-        for n, c in sru.weight_clips(sparams, scfg,
-                                     {n2: bits for n2 in names}).items():
-            wclips[(n, bits)] = c
-    presets = [{n: (b, max(b, 8)) for n in names} for b in (2, 4, 8, 16)]
-    qp_stack = jnp.asarray(stack_qps(
-        [sru.quant_triples_for(a, wclips, ranges, wr) for a in presets],
-        names))
-    pop_fwd = jax.jit(lambda p, f, q: sru.forward_population(p, scfg, f, q))
-    logits = jax.block_until_ready(pop_fwd(sparams, feats, qp_stack))
+    trained = X.train_small_sru(steps=8)
+    names = list(trained.layer_names)
+    presets = [{n: (b, 8) for n in names} for b in (2, 4, 8, 16)]
+    with tempfile.TemporaryDirectory() as d:
+        manifest = CC.pack_deployment(trained, presets, d)
+        m, banks, extras = CC.load_deployment(d)
+    by = manifest["bytes"]
+    print(f"packed artifact: {len(presets)} allocations, weight banks "
+          f"{by['packed_weight_banks']/1e3:.0f}kB "
+          f"({by['ratio']:.2f}x smaller than f32 banks)")
+    sparams = CC.serving_params(m, extras)     # FC bias only — no f32 W
+    qp_stack = jnp.asarray(CC.qp_stack(m))
+    feats = trained.val_subsets[0][0]
+    pop_fwd = jax.jit(lambda p, f, q, b: sru.forward_population(
+        p, trained.cfg, f, q, banks=b))
+    logits = jax.block_until_ready(pop_fwd(sparams, feats, qp_stack, banks))
     t0 = time.time()
-    jax.block_until_ready(pop_fwd(sparams, feats, qp_stack))
+    jax.block_until_ready(pop_fwd(sparams, feats, qp_stack, banks))
     dt = time.time() - t0
     print(f"population serving: {len(presets)} allocations x "
           f"{feats.shape[0]} seqs in one dispatch -> logits {logits.shape} "

@@ -142,6 +142,14 @@ class PopulationEvaluator:
     (optional) post-processes freshly built banks against the folded
     validation features (the SRU input-layer u-bank hook).
 
+    ``bank_format``: ``"f32"`` (default) caches the fake-quant f32 bank
+    stacks; ``"packed"`` caches packed-integer banks built by
+    ``make_packed_banks`` instead — >= 4x smaller in memory, bit-identical
+    error counts (the forward dequantizes containers to the exact f32 bank
+    rows). The packed format skips the ``extend_banks`` hook: the u-bank
+    specialization needs the f32 weight stacks, and precomputing |menu|^2
+    f32 u-streams would defeat the packed lane's memory story.
+
     ``mesh`` (optional): a mesh with a "pop" axis shards the population
     across devices — ``partition="shard_map"`` (default, exact per-shard
     program) or ``"gspmd"`` (jit with PartitionSpecs). Banks replicate per
@@ -158,7 +166,9 @@ class PopulationEvaluator:
                  use_banks: Optional[bool] = None,
                  qp_tables=None,
                  extend_banks: Optional[Callable] = None,
-                 menu_bits=None):
+                 menu_bits=None,
+                 bank_format: str = "f32",
+                 make_packed_banks: Optional[Callable] = None):
         from repro.core import quantization as Q
 
         self.layer_names = list(layer_names)
@@ -179,12 +189,25 @@ class PopulationEvaluator:
         # through ``menu_index_from_hi`` as well.
         self._menu_code = {b: k for k, b in
                            enumerate(menu_bits or Q.SUPPORTED_BITS)}
+        if bank_format not in ("f32", "packed"):
+            raise ValueError(f"unknown bank_format {bank_format!r} "
+                             "(want 'f32' or 'packed')")
         if use_banks is None:
-            use_banks = make_banks is not None
-        if use_banks and make_banks is None:
+            use_banks = (make_packed_banks if bank_format == "packed"
+                         else make_banks) is not None
+        if use_banks and bank_format == "packed" \
+                and make_packed_banks is None:
+            raise ValueError("bank_format='packed' requires "
+                             "make_packed_banks")
+        if bank_format == "packed" and not use_banks:
+            raise ValueError("bank_format='packed' requires use_banks=True "
+                             "(the packed lane IS a bank lane)")
+        if use_banks and bank_format == "f32" and make_banks is None:
             raise ValueError("use_banks=True requires make_banks")
         self.use_banks = use_banks
+        self.bank_format = bank_format
         self._make_banks = make_banks
+        self._make_packed_banks = make_packed_banks
         self._extend_banks = extend_banks
         # banks keyed by parameter-set identity; the params ref is kept so
         # a collected object's id can never alias a live cache entry
@@ -270,9 +293,13 @@ class PopulationEvaluator:
             return None
         key = id(params)
         if key not in self._banks:
-            banks = self._make_banks(params)
-            if self._folded and self._extend_banks is not None:
-                banks = self._extend_banks(banks, self._feats_all)
+            if self.bank_format == "packed":
+                # packed containers; no extend hook (see class docstring)
+                banks = self._make_packed_banks(params)
+            else:
+                banks = self._make_banks(params)
+                if self._folded and self._extend_banks is not None:
+                    banks = self._extend_banks(banks, self._feats_all)
             self._banks[key] = (params, banks)
         return self._banks[key][1]
 
@@ -403,13 +430,17 @@ class BatchedSRUEvaluator(PopulationEvaluator):
                  pop_axis: str = pop_sharding.POP_AXIS,
                  make_banks: Optional[Callable] = None,
                  use_banks: Optional[bool] = None,
-                 qp_tables=None):
+                 qp_tables=None,
+                 bank_format: str = "f32",
+                 make_packed_banks: Optional[Callable] = None):
         from repro.models import sru
 
         self.cfg = cfg
         if use_banks is None:       # banks need the explicit-population axis
-            use_banks = make_banks is not None and (fused or use_kernel)
-        if use_banks and make_banks is None:
+            maker = (make_packed_banks if bank_format == "packed"
+                     else make_banks)
+            use_banks = maker is not None and (fused or use_kernel)
+        if use_banks and bank_format == "f32" and make_banks is None:
             raise ValueError("use_banks=True requires make_banks")
         if use_banks and not (fused or use_kernel):
             raise ValueError("banks require the fused or kernel lowering")
@@ -429,4 +460,5 @@ class BatchedSRUEvaluator(PopulationEvaluator):
                          forward_pop, mesh=mesh, partition=partition,
                          pop_axis=pop_axis, make_banks=make_banks,
                          use_banks=use_banks, qp_tables=qp_tables,
-                         extend_banks=extend)
+                         extend_banks=extend, bank_format=bank_format,
+                         make_packed_banks=make_packed_banks)

@@ -14,6 +14,7 @@ integer pipeline is exercised separately by the Pallas quant_matmul kernel.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -139,14 +140,24 @@ def fake_quant_triple(x, scale, lo, hi, use_ste: bool = True):
 # is bitwise identical to requantizing on the fly (including the 16-bit
 # fixed-point grid, which ``quant_triple`` expresses as a plain
 # (scale, -32768, 32767) triple).
+#
+# Weight rows are PURE grid values (``use_ste=False``): the STE wrapper's
+# float round-trip ``x + (q - x)`` can differ from ``q`` in the last ulp at
+# clipped elements, and no eval lane takes gradients through weights (beacon
+# retraining quantizes via the separate ``qspec``/``ste_quantize_weight``
+# path). Every eval weight lane — scalar, fused requant, f32 bank, packed
+# bank — therefore carries exactly ``clip(round(w/s), lo, hi) * s``, which
+# is what makes the packed-integer reconstruction below bit-exact.
 
 @jax.jit
 def build_weight_bank(w, triples):
     """Stack fake-quantized copies of ``w``: (K, *w.shape) where row k is
-    ``fake_quant_triple(w, *triples[k])``. ``triples``: (K, 3) float32 of
-    (scale, lo, hi) grids — one per menu entry, from ``menu_triples``."""
+    ``fake_quant_triple(w, *triples[k], use_ste=False)``. ``triples``:
+    (K, 3) float32 of (scale, lo, hi) grids — one per menu entry, from
+    ``menu_triples``."""
     triples = jnp.asarray(triples, jnp.float32)
-    return jax.vmap(lambda t: fake_quant_triple(w, t[0], t[1], t[2]))(triples)
+    return jax.vmap(lambda t: fake_quant_triple(w, t[0], t[1], t[2],
+                                                use_ste=False))(triples)
 
 
 def menu_triples(bits_menu, clip_of_bits) -> np.ndarray:
@@ -170,6 +181,103 @@ def menu_index_from_hi(w_hi, bits_menu=SUPPORTED_BITS):
     for t in sorted(tops)[:-1]:
         idx = idx + (w_hi > t).astype(jnp.int32)
     return idx
+
+
+# ------------------------------------------------ packed-integer weight banks
+#
+# The f32 banks above realize the *compute* story (gather instead of
+# requantize) but not the paper's *memory* story: every bank row is still a
+# full-precision copy, so a |menu|=4 bank costs 16 bytes/weight. The packed
+# format stores what the hardware actually ships — integer codes in their
+# natural containers plus per-channel scale rows:
+#
+#     {"q2":  int8  (ceil(K/4), N)   4 codes/byte, kernels/ref.py layout
+#      "q4":  int8  (ceil(K/2), N)   2 codes/byte,        "        "
+#      "q8":  int8  (K, N)
+#      "q16": int16 (K, N)           fixed-point codes
+#      "scale": f32 (|menu|, C)}     per-channel scale rows; C=1 for the
+#                                    per-tensor MOHAQ grids (a broadcastable
+#                                    channel axis, not |menu| full rows)
+#
+# for a (K, N) weight: ~3.75 bytes/weight + 16 bytes vs the f32 bank's 16
+# bytes/weight — >= 4x smaller at any real layer shape. The packing layout
+# is shared with ``kernels/ref.py::pack_weights`` / ``unpack_weights`` (low
+# bits first along the contraction axis), so the Pallas ``bank_qmm_pop``
+# kernel dequantizes blocks with the same ``_unpack_block`` it already uses
+# for ``quant_matmul``.
+#
+# Bit-parity contract: codes are ``clip(round(w/s), lo, hi)`` on the same
+# (scale, lo, hi) triples the f32 banks use, and dequantization is a single
+# f32 multiply by the same scale — elementwise identical to the pure-grid
+# ``clip(round(x/s), lo, hi) * s`` that ``build_weight_bank`` stores (see
+# the use_ste note above). Integer grids are exact by construction; the
+# 16-bit fixed-point grid is exact because |codes| <= 32768 < 2^24 round-
+# trips int16 -> f32 losslessly. Hence ``dequant_packed_bank`` reconstructs
+# the f32 bank stack *bitwise*, and the packed lane inherits the banked
+# lane's parity with scalar requantization. (Recurrent v/b vectors are NOT
+# packed — they stay fake-quant f32 ``fixed_point_16`` exactly as in the
+# f32 banks.)
+
+_PACK_BITS = (2, 4)          # menu entries stored packed in int8 containers
+
+
+def _code_dtype(bits: int):
+    return jnp.int16 if bits == 16 else jnp.int8
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def _packed_codes(w, scale, lo, hi, bits: int):
+    """Integer codes of ``w`` on the (scale, lo, hi) grid, packed into the
+    container for ``bits`` (kernels/ref.py layout for sub-byte grids)."""
+    codes = jnp.clip(jnp.round(w / scale), lo, hi).astype(_code_dtype(bits))
+    if bits in _PACK_BITS:
+        from repro.kernels import ref as kref
+        codes = kref.pack_weights(codes, bits)
+    return codes
+
+
+def build_packed_weight_bank(w, triples, bits_menu=SUPPORTED_BITS):
+    """Packed-integer bank of ``w`` (2-D, contraction axis first): integer
+    codes per menu entry in their natural containers plus a (|menu|, 1)
+    per-channel scale matrix (the channel axis is broadcastable: MOHAQ grids
+    are per-tensor, so dequantization multiplies every channel by exactly
+    the grid scale the f32 bank used). ``triples`` as in
+    ``build_weight_bank``."""
+    if w.ndim != 2:
+        raise ValueError(f"packed banks require 2-D weights, got {w.shape}")
+    triples = np.asarray(triples, np.float32)
+    if len(triples) != len(bits_menu):
+        raise ValueError(f"{len(triples)} triples for menu {bits_menu}")
+    bank = {}
+    for k, bits in enumerate(bits_menu):
+        s, lo, hi = (jnp.float32(t) for t in triples[k])
+        bank[f"q{bits}"] = _packed_codes(w, s, lo, hi, bits)
+    bank["scale"] = jnp.asarray(triples[:, 0:1])
+    return bank
+
+
+def dequant_packed_bank(packed, bits_menu=SUPPORTED_BITS):
+    """Reconstruct the (|menu|, K, N) f32 bank stack from a packed bank —
+    bitwise identical to ``build_weight_bank`` on the same weight/triples
+    (see parity note above). This is the non-kernel packed lane: one
+    dequantization per layer (lane-independent), then the existing
+    ``jnp.take`` row gather; HBM keeps only the packed containers."""
+    from repro.kernels import ref as kref
+    wide = packed[f"q{max(b for b in bits_menu if b not in _PACK_BITS)}"]
+    k_dim = wide.shape[0]
+    rows = []
+    for k, bits in enumerate(bits_menu):
+        codes = packed[f"q{bits}"]
+        if bits in _PACK_BITS:
+            codes = kref.unpack_weights(codes, bits, k_dim)
+        rows.append(codes.astype(jnp.float32) * packed["scale"][k][None, :])
+    return jnp.stack(rows)
+
+
+def packed_bank_nbytes(bank) -> int:
+    """Bytes a bank (packed dict or f32 stack) occupies — no host transfer."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(bank))
 
 
 class ActRangeCalibrator:

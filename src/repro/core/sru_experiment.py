@@ -151,6 +151,14 @@ class TrainedSRU:
         return sru.build_weight_banks(params, self.cfg, self.wclips,
                                       self.wranges)
 
+    def make_packed_banks(self, params):
+        """Packed-integer banks (int codes + scales) for ``params`` — same
+        grids as ``make_banks``, >= 4x smaller, dequantizes to the f32 bank
+        rows bitwise. Selected via ``bank_format='packed'`` on the batched
+        evaluator; also what ``tools/convert_checkpoint.py`` ships."""
+        return sru.build_weight_banks(params, self.cfg, self.wclips,
+                                      self.wranges, packed=True)
+
     def qp_menu_tables(self):
         """Per-layer menu-indexed quantization-grid tables: two
         (L, |menu|, 3) float32 arrays of weight / activation
@@ -176,7 +184,8 @@ class TrainedSRU:
 
     def batched_evaluator(self, fused: bool = True, mesh=None,
                           partition: str = "shard_map",
-                          use_banks: Optional[bool] = None
+                          use_banks: Optional[bool] = None,
+                          bank_format: str = "f32"
                           ) -> batched_eval.BatchedSRUEvaluator:
         """Lazily-built population evaluator (one jitted call scores a
         whole GA generation; compiled per population-size bucket).
@@ -184,25 +193,30 @@ class TrainedSRU:
         keeps the PR-1 vmap lowering for comparison. ``use_banks`` controls
         the quantized-weight-bank gather (default: on for the fused/kernel
         lanes — ``use_banks=False`` keeps the requantize-per-lane v2 path
-        for benchmarking). ``mesh`` shards the population axis across its
+        for benchmarking). ``bank_format='packed'`` gathers from packed-
+        integer banks instead of f32 stacks (bit-identical errors, >= 4x
+        less bank memory). ``mesh`` shards the population axis across its
         "pop" device axis (``partition`` picks the shard_map or GSPMD
         lowering, see distributed.pop_sharding)."""
         # Mesh hashes by devices + axis names, so equivalent meshes built
         # fresh per call share one compiled evaluator
         if use_banks is None:
             use_banks = fused
-        key = (fused, use_banks, mesh, partition if mesh is not None else "")
+        key = (fused, use_banks, bank_format, mesh,
+               partition if mesh is not None else "")
         if key not in self._batched_eval:
             self._batched_eval[key] = batched_eval.BatchedSRUEvaluator(
                 self.cfg, self.val_subsets, self.qp_for, fused=fused,
                 mesh=mesh, partition=partition,
                 make_banks=self.make_banks, use_banks=use_banks,
-                qp_tables=self.qp_menu_tables())
+                qp_tables=self.qp_menu_tables(), bank_format=bank_format,
+                make_packed_banks=self.make_packed_banks)
         return self._batched_eval[key]
 
     def val_error_batch(self, allocs, params=None, *, fused: bool = True,
                         mesh=None, partition: str = "shard_map",
-                        use_banks: Optional[bool] = None):
+                        use_banks: Optional[bool] = None,
+                        bank_format: str = "f32"):
         """Batched counterpart of ``val_error``: max error over the 4
         validation subsets for EVERY allocation in one call. Matches the
         scalar path exactly (integer error counts). ``params`` selects the
@@ -211,9 +225,12 @@ class TrainedSRU:
         default on the fused lane — bitwise identical, one bank build per
         parameter set); ``mesh`` partitions the candidates across devices."""
         params = self.params if params is None else params
+        if bank_format == "packed" and use_banks is None:
+            use_banks = True
         return self.batched_evaluator(fused=fused, mesh=mesh,
                                       partition=partition,
-                                      use_banks=use_banks
+                                      use_banks=use_banks,
+                                      bank_format=bank_format
                                       ).errors(allocs, params)
 
     def val_error(self, alloc: Optional[Alloc] = None,
@@ -281,7 +298,7 @@ def train_small_sru(steps: int = 400, *, cfg: SRUModelConfig = SEARCH_CFG,
     wclips = {}
     for bits in (2, 4, 8):
         for name, c in sru.weight_clips(
-                params, cfg, {n: bits for n in LAYER_NAMES}).items():
+                params, cfg, {n: bits for n in cfg.layer_names()}).items():
             wclips[(name, bits)] = c
     wranges = sru.weight_ranges(params, cfg)
     trained = TrainedSRU(cfg, params, task, subsets, test, act_ranges,

@@ -136,9 +136,11 @@ def forward_population(params, cfg: ArchConfig, tokens, qp_stack,
 
         if banks is None:
             def get_w(name):
+                # pure grid values (use_ste=False) — matches the bank rows
                 r = row[li[name]]
                 leaves = _layer_leaves(params, cfg, name)
-                return {k: Q.fake_quant_triple(w, r[0], r[1], r[2])
+                return {k: Q.fake_quant_triple(w, r[0], r[1], r[2],
+                                               use_ste=False)
                         for k, w in leaves.items()}
         else:
             def get_w(name):

@@ -1,6 +1,14 @@
 """jit'd public wrappers around the Pallas kernels (padding + interpret
 fallback on CPU). Use these from model code; call the raw kernels only in
-tests."""
+tests.
+
+``interpret`` defaults to *backend detection*: ``None`` resolves to True on
+CPU (the Pallas interpreter is the only way to execute the kernel bodies
+there) and False anywhere a real compiler exists (TPU/GPU) — previously the
+wrappers hard-defaulted to True, silently running the Python interpreter
+even on backends that compile the kernels. Pass ``interpret=True/False``
+explicitly to override. Resolution happens at trace time and the backend is
+fixed per process, so the jit cache stays consistent."""
 from __future__ import annotations
 
 import functools
@@ -16,6 +24,13 @@ from repro.kernels import ref as _ref
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _resolve_interpret(interpret):
+    """None -> interpret only where nothing can compile the kernel (CPU)."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
 
 
 def _pad_to(x, mult, axis):
@@ -40,12 +55,12 @@ def pack_for_kernel(w, bits: int, clip: float):
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
-def quant_matmul(x, packed_w, scales, bits: int, interpret: bool = True):
-    """Padded/jitted quant matmul; interpret=True executes the Pallas body
-    in Python on CPU (this container), False targets real TPU."""
+def quant_matmul(x, packed_w, scales, bits: int, interpret=None):
+    """Padded/jitted quant matmul; interpret=None picks the backend default
+    (interpreter on CPU, compiled elsewhere), True/False forces it."""
+    interpret = _resolve_interpret(interpret)
     M, K = x.shape
     N = packed_w.shape[1]
-    bm = min(128, max(8, 1 << (M - 1).bit_length()))
     bm = 128 if M >= 128 else _next_mult(M, 8)
     bn = 128 if N >= 128 else _next_mult(N, 128)
     bk = 256 if K >= 256 else _next_mult(K, 8 // bits * 8)
@@ -65,9 +80,10 @@ def _next_mult(x, m):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r, interpret: bool = True):
+def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r, interpret=None):
     """Padded/jitted fused SRU scan. Returns (h, r); the caller applies the
     highway skip h + (1-r)*x when the layer input width equals n."""
+    interpret = _resolve_interpret(interpret)
     B, T, n = uw.shape
     bb = 8 if B >= 8 else B
     bn = 128 if n >= 128 else _next_mult(n, 8)
@@ -85,13 +101,14 @@ def sru_scan(uw, uf, ur, v_f, v_r, b_f, b_r, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def bank_mxv_pop(x, bank, idx, interpret: bool = True):
+def bank_mxv_pop(x, bank, idx, interpret=None):
     """Padded/jitted population MxV against a quantized-weight bank.
     x: (P, M, m), bank: (K, m, N) — the K menu-entry fake-quantizations of
     one weight matrix — idx: (P,) int32 menu indices. Returns (P, M, N),
     ``out[p] = x[p] @ bank[idx[p]]``. The row gather happens inside the
     Pallas grid via a scalar-prefetched index (see sru_scan.bank_mxv_pop):
     no per-lane requantize pass and no (P, m, N) expanded weights."""
+    interpret = _resolve_interpret(interpret)
     P, M, m = x.shape
     N = bank.shape[-1]
     bm = 8 if M >= 8 else M
@@ -104,11 +121,40 @@ def bank_mxv_pop(x, bank, idx, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def sru_scan_pop(uw, uf, ur, v_f, v_r, b_f, b_r, interpret: bool = True):
+def bank_qmm_pop(x, packed, idx, interpret=None):
+    """Padded/jitted population MxV against a PACKED quantized-weight bank
+    (``quantization.build_packed_weight_bank`` dict for a (m, N) weight).
+    x: (P, M, m), idx: (P,) int32 menu indices ordered like
+    ``SUPPORTED_BITS``. Returns (P, M, N),
+    ``out[p] = x[p] @ dequant(packed)[idx[p]]``. Int containers stream to
+    VMEM and dequantize in-kernel (see sru_scan.bank_qmm_pop): HBM weight
+    traffic drops below even the f32 bank lane's gathered row."""
+    interpret = _resolve_interpret(interpret)
+    P, M, m = x.shape
+    N = packed["q8"].shape[1]
+    bm = 8 if M >= 8 else M
+    bn = 128 if N >= 128 else _next_mult(N, 8)
+    x_p, _ = _pad_to(x, bm, 1)
+    # the raw kernel gathers (1, bn) scale tiles, so it wants full
+    # per-channel rows; the stored bank keeps a broadcastable (K, 1)
+    # column for per-tensor grids — expand here, at trace time
+    scale = packed["scale"]
+    if scale.shape[1] == 1:
+        scale = jnp.broadcast_to(scale, (scale.shape[0], N))
+    p_p = {k: _pad_to(v, bn, 1)[0]
+           for k, v in {**packed, "scale": scale}.items()}
+    out = _sru.bank_qmm_pop(x_p, p_p, idx.astype(jnp.int32),
+                            block=(bm, bn), interpret=interpret)
+    return out[:, :M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sru_scan_pop(uw, uf, ur, v_f, v_r, b_f, b_r, interpret=None):
     """Padded/jitted population-axis SRU scan. uw/uf/ur: (P, B, T, n) — one
     quantization candidate per lane, v/b shared. Returns (h, r), both
     (P, B, T, n). The population axis maps straight onto the kernel grid
     (see sru_scan.sru_scan_pop) instead of vmapping over ``pallas_call``."""
+    interpret = _resolve_interpret(interpret)
     P, B, T, n = uw.shape
     bb = 8 if B >= 8 else B
     bn = 128 if n >= 128 else _next_mult(n, 8)

@@ -38,7 +38,7 @@ def _unpack_block(packed, bits: int):
     return signed.reshape(-1, packed.shape[-1])
 
 
-def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, *, bits: int, n_k: int):
+def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, *, bits: int):
     k = pl.program_id(2)
     w = _unpack_block(w_ref[...], bits).astype(jnp.float32)
     w = w * s_ref[...][None, :].astype(jnp.float32)
@@ -65,11 +65,23 @@ def quant_matmul(x, packed_w, scales, bits: int,
     M, K = x.shape
     N = packed_w.shape[1]
     bm, bn, bk = block
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (x.shape, N, block)
+    # shape validation raises (not assert: asserts vanish under python -O,
+    # and a silently mis-blocked pallas_call reads out of bounds)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(
+            f"quant_matmul shapes must divide the block: x {(M, K)}, "
+            f"N={N}, block (bm, bn, bk)={block} -> remainders "
+            f"(M%bm={M % bm}, N%bn={N % bn}, K%bk={K % bk}); "
+            f"ops.quant_matmul pads for you")
     per = 8 // bits
-    assert bk % per == 0 and (K * bits) % 8 == 0
+    if bk % per or (K * bits) % 8:
+        raise ValueError(
+            f"quant_matmul packing misaligned for bits={bits}: K-block "
+            f"bk={bk} must be a multiple of {per} codes/byte "
+            f"(bk%per={bk % per}) and K={K} must fill whole bytes "
+            f"(K*bits%8={(K * bits) % 8})")
     grid = (M // bm, N // bn, K // bk)
-    kernel = functools.partial(_qmm_kernel, bits=bits, n_k=grid[2])
+    kernel = functools.partial(_qmm_kernel, bits=bits)
     return pl.pallas_call(
         kernel,
         grid=grid,

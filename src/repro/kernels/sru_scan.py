@@ -40,6 +40,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quant_matmul import _unpack_block
+
 
 def _sru_kernel(uw_ref, uf_ref, ur_ref, vf_ref, vr_ref, bf_ref, br_ref,
                 h_ref, r_ref, cl_ref):
@@ -161,6 +163,82 @@ def bank_mxv_pop(x, bank, idx, block: Tuple[int, int] = (8, 128),
         out_shape=jax.ShapeDtypeStruct((P, M, N), jnp.float32),
         interpret=interpret,
     )(idx, x, bank)
+
+
+def _bank_qmm_kernel(idx_ref, x_ref, q2_ref, q4_ref, q8_ref, q16_ref,
+                     s_ref, o_ref):
+    # the scale-row gather happened in s_ref's index_map; the containers are
+    # menu-independent, so the body unpacks each (same _unpack_block as
+    # quant_matmul) and selects the lane's grid by the prefetched menu index
+    m = q8_ref.shape[0]
+    sel = idx_ref[pl.program_id(0)]
+    w2 = _unpack_block(q2_ref[...], 2)[:m].astype(jnp.float32)
+    w4 = _unpack_block(q4_ref[...], 4)[:m].astype(jnp.float32)
+    w8 = q8_ref[...].astype(jnp.float32)
+    w16 = q16_ref[...].astype(jnp.float32)
+    codes = jnp.where(sel == 0, w2,
+                      jnp.where(sel == 1, w4,
+                                jnp.where(sel == 2, w8, w16)))
+    w = codes * s_ref[0][None, :].astype(jnp.float32)
+    o_ref[0] = jnp.dot(x_ref[0], w, preferred_element_type=jnp.float32)
+
+
+def bank_qmm_pop(x, packed, idx, block: Tuple[int, int] = (8, 128),
+                 interpret: bool = False):
+    """Population MxV against a PACKED quantized-weight bank — the int-
+    container twin of ``bank_mxv_pop``.
+
+    x: (P, M, m) f32 per-lane quantized activations; ``packed``: a
+    ``quantization.build_packed_weight_bank`` dict for a (m, N) weight
+    ({"q2","q4","q8","q16","scale"} — sub-byte codes packed along the
+    contraction axis in the ``ref.pack_weights`` layout); idx: (P,) int32
+    menu indices ordered like ``SUPPORTED_BITS`` (0 -> 2-bit ... 3 -> 16-bit).
+    Returns (P, M, N) f32 with ``out[p] = x[p] @ dequant(packed)[idx[p]]``.
+
+    Only the (1, bn)-tile of the *selected* scale row is gathered via the
+    scalar-prefetch index_map; the integer containers stream in at
+    ~3.75 bytes/weight total — less than the f32 bank lane's 4 bytes/weight
+    for the gathered row — and dequantization runs on the VPU in-kernel.
+    M and N must divide the block sizes (ops.bank_qmm_pop pads for you)."""
+    q2, q4, q8, q16 = packed["q2"], packed["q4"], packed["q8"], packed["q16"]
+    scale = packed["scale"]
+    P, M, m = x.shape
+    N = q8.shape[1]
+    if q8.shape[0] != m or q16.shape != q8.shape or idx.shape != (P,):
+        raise ValueError(
+            f"bank_qmm_pop container mismatch: x {x.shape}, q8 {q8.shape}, "
+            f"q16 {q16.shape}, idx {idx.shape}")
+    if any(c.shape[1] != N for c in (q2, q4, scale)):
+        raise ValueError(
+            f"bank_qmm_pop output-channel mismatch: N={N} but q2 {q2.shape}, "
+            f"q4 {q4.shape}, scale {scale.shape}")
+    bm, bn = block
+    if M % bm or N % bn:
+        raise ValueError(
+            f"bank_qmm_pop shapes must divide the block: x {x.shape}, N={N},"
+            f" block {block}; ops.bank_qmm_pop pads for you")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(P, M // bm, N // bn),
+        in_specs=[pl.BlockSpec((1, bm, m), lambda p, i, j, idx_ref:
+                               (p, i, 0)),
+                  pl.BlockSpec((q2.shape[0], bn), lambda p, i, j, idx_ref:
+                               (0, j)),
+                  pl.BlockSpec((q4.shape[0], bn), lambda p, i, j, idx_ref:
+                               (0, j)),
+                  pl.BlockSpec((m, bn), lambda p, i, j, idx_ref: (0, j)),
+                  pl.BlockSpec((m, bn), lambda p, i, j, idx_ref: (0, j)),
+                  pl.BlockSpec((1, bn), lambda p, i, j, idx_ref:
+                               (idx_ref[p], j))],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda p, i, j, idx_ref:
+                               (p, i, j)),
+    )
+    return pl.pallas_call(
+        _bank_qmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, M, N), jnp.float32),
+        interpret=interpret,
+    )(idx, x, q2, q4, q8, q16, scale)
 
 
 def sru_scan_pop(uw, uf, ur, v_f, v_r, b_f, b_r,

@@ -195,7 +195,8 @@ def quant_triples_for(alloc, wclips: Dict[Tuple[str, int], float],
 def build_weight_banks(params, cfg: SRUModelConfig,
                        wclips: Dict[Tuple[str, int], float],
                        wranges: Dict[str, float],
-                       menu: Tuple[int, ...] = Q.SUPPORTED_BITS):
+                       menu: Tuple[int, ...] = Q.SUPPORTED_BITS,
+                       packed: bool = False):
     """Precompute the quantized-weight banks for a parameter set.
 
     Returns a pytree mirroring ``params``: each MxV weight becomes a stacked
@@ -210,7 +211,16 @@ def build_weight_banks(params, cfg: SRUModelConfig,
     model ~4x the weight footprint, paid once per parameter set (base model
     or retrained beacon) and reused for every candidate of every generation.
     ``forward_population(banks=...)`` then gathers rows by menu index
-    instead of requantizing per lane per call."""
+    instead of requantizing per lane per call.
+
+    ``packed=True`` stores each MxV bank as PACKED integer containers +
+    scales (``Q.build_packed_weight_bank``) instead of the f32 stack —
+    >= 4x smaller, and ``dequant_packed_bank`` reconstructs the f32 rows
+    bitwise, so every parity contract carries over. The 16-bit recurrent
+    vectors/biases stay fake-quant f32 (``fixed_point_16``) in both
+    formats; ``forward_population`` detects the format per bank node."""
+    build = (lambda w, t: Q.build_packed_weight_bank(w, t, menu)) if packed \
+        else Q.build_weight_bank
     fixed16 = jax.jit(Q.fixed_point_16)
     banks: Dict = {}
     for name in cfg.layer_names():
@@ -218,13 +228,12 @@ def build_weight_banks(params, cfg: SRUModelConfig,
             menu, lambda b: wranges[name] if b == 16 else wclips[(name, b)])
         if name.startswith("L"):
             banks[name] = {
-                d: {"W": Q.build_weight_bank(params[name][d]["W"], trips),
+                d: {"W": build(params[name][d]["W"], trips),
                     "v": fixed16(params[name][d]["v"]),
                     "b": fixed16(params[name][d]["b"])}
                 for d in ("fwd", "bwd")}
         else:
-            banks[name] = {"W": Q.build_weight_bank(params[name]["W"],
-                                                    trips)}
+            banks[name] = {"W": build(params[name]["W"], trips)}
     return banks
 
 
@@ -255,8 +264,10 @@ def forward(params, cfg: SRUModelConfig, feats,
     - qp[name] = (w_scale, w_lo, w_hi, a_scale, a_lo, a_hi): dynamic grids
       (one compilation serves every allocation — used by the GA search).
     MxV inputs fake-quantized against calibrated ranges, MxV weights against
-    MMSE clips, recurrent vectors/biases at 16-bit fixed point. STE
-    everywhere, so the same path retrains beacons (binary-connect).
+    MMSE clips, recurrent vectors/biases at 16-bit fixed point. The qspec
+    path keeps STE everywhere so it retrains beacons (binary-connect); the
+    eval-only qp path stores weights as pure grid values (bit-identical to
+    the f32 and packed bank rows).
     """
     quantized = qspec is not None or qp is not None
 
@@ -266,8 +277,11 @@ def forward(params, cfg: SRUModelConfig, feats,
     # activation twice and skew the median-of-max calibration statistics.
     def prep_w(name, w):
         if qp is not None and name in qp:
+            # pure grid values (no STE): the qp lane is eval-only — beacon
+            # retraining goes through the qspec/ste_quantize_weight branch —
+            # and pure ``q`` is what the banks (f32 AND packed) store
             ws, wl, wh, _as, _al, _ah = qp[name]
-            return Q.fake_quant_triple(w, ws, wl, wh)
+            return Q.fake_quant_triple(w, ws, wl, wh, use_ste=False)
         if qspec is not None and name in qspec:
             wb, _ab = qspec[name]
             clip = (wclips or {}).get(name)
@@ -329,10 +343,13 @@ def forward_population(params, cfg: SRUModelConfig, feats, qp_stack,
     and kernel lanes *gather* each lane's quantized weight — row
     ``menu_index_from_hi(w_hi)`` of the (|menu|, m, h) bank — instead of
     fake-quantizing every weight tensor per lane per call. Only activations
-    (data-dependent) are still quantized on the fly. Bank rows are built by
-    the identical ``fake_quant_triple`` expression, so the gathered lane is
-    bitwise equal to the requantized one; all parity contracts hold
-    unchanged.
+    (data-dependent) are still quantized on the fly. Bank rows store the
+    identical pure-grid fake-quant values the qp lane computes, so the
+    gathered lane is bitwise equal to the requantized one; all parity
+    contracts hold unchanged. Banks built with ``packed=True`` are detected
+    per node: the fused lane dequantizes the int containers once per layer
+    (bitwise equal to the f32 rows) and the kernel lane streams them into
+    ``kernels.ops.bank_qmm_pop``, which dequantizes in-kernel.
 
     Three lowerings, all computing bit-identical per-element arithmetic to
     the scalar ``forward(qp=)`` path (the GA's Pareto fronts are exact):
@@ -451,13 +468,25 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
                                              row[:, 5])
 
     def q_w(name, w):                         # per-lane weight grids
+        # pure grid values (use_ste=False): matches the scalar qp lane and
+        # the bank rows exactly — see quantization.build_weight_bank
         row = qp_stack[:, li[name]]
-        return jax.vmap(lambda s, lo, hi: Q.fake_quant_triple(w, s, lo, hi))(
-            row[:, 0], row[:, 1], row[:, 2])
+        return jax.vmap(lambda s, lo, hi: Q.fake_quant_triple(
+            w, s, lo, hi, use_ste=False))(row[:, 0], row[:, 1], row[:, 2])
 
-    def bank_of(name, sub=None):
+    def raw_bank(name, sub=None):
         node = banks[name] if sub is None else banks[name][sub]
         return node["W"]
+
+    def bank_of(name, sub=None):
+        w = raw_bank(name, sub)
+        if isinstance(w, dict):
+            # packed-integer bank: reconstruct the f32 menu stack ONCE per
+            # layer (lane-independent, bitwise equal to the f32 bank rows —
+            # quantization.dequant_packed_bank) and gather from it; HBM
+            # keeps only the packed containers
+            return Q.dequant_packed_bank(w)
+        return w
 
     def lane_w(name, sub=None):
         """(P, m, h) per-lane quantized weight: bank gather or requant."""
@@ -473,11 +502,16 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
     def mxv_layer(xq, name, sub=None):
         """Per-lane quantized MxV. With banks + kernel the gather happens
         INSIDE the Pallas grid (scalar-prefetched row index), so the bank is
-        read in place instead of being expanded to P lane copies first."""
+        read in place instead of being expanded to P lane copies first —
+        packed banks additionally dequantize in-kernel (bank_qmm_pop)."""
         if banks is not None and use_kernel:
             from repro.kernels import ops as kops
-            u = kops.bank_mxv_pop(xq.reshape(P, -1, xq.shape[-1]),
-                                  bank_of(name, sub), w_idx[:, li[name]])
+            w = raw_bank(name, sub)
+            x2 = xq.reshape(P, -1, xq.shape[-1])
+            if isinstance(w, dict):
+                u = kops.bank_qmm_pop(x2, w, w_idx[:, li[name]])
+            else:
+                u = kops.bank_mxv_pop(x2, w, w_idx[:, li[name]])
             return u.reshape(xq.shape[:3] + (u.shape[-1],))
         return mxv(xq, lane_w(name, sub))
 

@@ -401,6 +401,34 @@ def test_contracts_fail_on_requantizing_forward(sru_harness):
     assert all(f.path == h.anchor_path for f in findings)
 
 
+def test_contracts_fail_on_f32_leak_in_packed_lane(sru_harness):
+    """A 'packed' lane that secretly closes over the f32 bank stacks must
+    trip the C1 packed-leak detector (weights have to ship as integer
+    containers + scales)."""
+    import dataclasses
+
+    from repro.models import sru
+    from tools.analysis.contracts import check_harness
+
+    h = sru_harness
+    cfg = h.target.cfg
+    f32_banks = h.target.make_banks(h.target.params)
+
+    def leaky_forward(params, feats, qp_stack, banks=None):
+        # banked/requant lanes behave normally; the packed dict is swapped
+        # for the closed-over f32 stacks — exactly the leak C1 polices
+        if banks is not None and isinstance(banks["L0"]["fwd"]["W"], dict):
+            banks = f32_banks
+        return sru.forward_population(params, cfg, feats, qp_stack,
+                                      fused=True, banks=banks)
+
+    bad = dataclasses.replace(h, forward_pop=leaky_forward)
+    findings = check_harness(bad)
+    assert any(f.rule == "C1" and "closes over f32 bank stacks"
+               in f.message for f in findings)
+    assert all(f.path == h.anchor_path for f in findings)
+
+
 def test_contract_registry_lists_both_targets():
     from repro.core import target_registry as tr
     assert {"sru", "xlstm"} <= set(tr.list_contract_targets())

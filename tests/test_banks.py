@@ -41,11 +41,13 @@ def _random_allocs(problem, n, seed=0):
             for _ in range(n)]
 
 
-# the parity target is the JITTED fake-quant expression — the only form the
-# scalar and population forwards ever execute (under jit, XLA folds the STE
-# wrapper ``x + stop_gradient(q - x)`` to ``q``; eager mode keeps the float
-# round-trip, which can differ in the last ulp and is never used at eval)
-_fq = jax.jit(Q.fake_quant_triple)
+# the parity target is the pure-grid fake-quant expression (use_ste=False):
+# eval lanes never take weight gradients, and the STE wrapper's float
+# round-trip ``x + (q - x)`` can differ from ``q`` in the last ulp at
+# clipped elements — pure ``q`` is what every eval weight lane (scalar qp,
+# fused requant, f32 bank, packed bank) computes
+_fq = jax.jit(lambda x, s, lo, hi: Q.fake_quant_triple(x, s, lo, hi,
+                                                       use_ste=False))
 
 
 class TestBankRows:

@@ -14,6 +14,13 @@ C1  gather-don't-requantize — the banked ``forward_population`` jaxpr
     banked jaxpr must contain only marker-carrying rounds — and as a
     detector sanity check, the requantizing lane (banks=None) must contain
     at least one non-marker round, proving the discrimination works.
+    Targets that expose ``make_packed_banks`` get the packed variant too:
+    the packed ``forward_population`` jaxpr must (a) likewise show only
+    marker-carrying rounds and (b) close over NO f32 constant at a
+    bank-stack shape ``(|menu|,) + weight_shape`` — weights ship as
+    int8/int16 containers + scales; f32 rows exist only as in-trace
+    dequant intermediates (sanity: the f32-bank jaxpr must show such a
+    constant, or the leak detector proves nothing).
 C2  no f64 — no ``convert_element_type`` to float64 and no float64
     intermediate anywhere in an eval jaxpr (the parity contracts are
     f32/fixed-point; a stray promotion silently changes every error count).
@@ -145,8 +152,50 @@ def check_harness(h) -> List[Finding]:
     else:
         requant = None
 
+    # --- C1-packed: the packed lane ships integers, not f32 stacks ------
+    # Two structural properties of the packed forward_population jaxpr:
+    # (a) like C1, every round op carries the activation marker (weights
+    #     come from containers, never a requantize), and (b) no f32
+    #     constant at a bank-stack shape (|menu|, *weight_shape) — the
+    #     closed-over weights must be the int8/int16 containers + scales;
+    #     the f32 rows may only exist as in-trace dequant intermediates.
+    make_packed = getattr(h.target, "make_packed_banks", None)
+    packed_jx = None
+    if make_packed is not None:
+        pbanks = make_packed(params)
+        packed_jx = jax.make_jaxpr(
+            lambda qp: h.forward_pop(params, h.feats, qp, pbanks))(qp_stack)
+        for eqn in _round_eqns(packed_jx):
+            if not _has_marker(eqn, h.marker_dim):
+                fail("C1", "packed forward_population jaxpr contains a "
+                     f"round op on shapes {_shapes(eqn)} without the "
+                     f"activation marker dim {h.marker_dim}: a weight is "
+                     "being re-quantized instead of dequantized from the "
+                     "packed containers")
+        menu_len = len(h.target.menu)
+        w_stack_shapes = {
+            (menu_len,) + tuple(leaf.shape)
+            for path, leaf in jax.tree_util.tree_leaves_with_path(params)
+            if getattr(path[-1], "key", None) == "W"}
+
+        def _f32_stack_consts(jx) -> List[tuple]:
+            return [tuple(cv.aval.shape) for cv in jx.jaxpr.constvars
+                    if tuple(getattr(cv.aval, "shape", ())) in w_stack_shapes
+                    and cv.aval.dtype == np.dtype("float32")]
+
+        leaked = _f32_stack_consts(packed_jx)
+        if leaked:
+            fail("C1", "packed forward_population jaxpr closes over f32 "
+                 f"bank stacks at weight shapes {sorted(set(leaked))} — "
+                 "the packed lane must ship integer containers + scales")
+        if not _f32_stack_consts(banked):
+            fail("C1", "sanity: the f32-bank jaxpr shows no f32 bank-stack "
+                 "constant at any weight shape — the packed-lane leak "
+                 "detector cannot discriminate on this harness")
+
     # --- C2: no f64 anywhere in the eval jaxprs -------------------------
-    for label, jx in (("banked", banked), ("requant", requant)):
+    for label, jx in (("banked", banked), ("requant", requant),
+                      ("packed", packed_jx)):
         if jx is None:
             continue
         for msg in sorted(set(_f64_violations(jx))):

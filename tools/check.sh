@@ -29,8 +29,13 @@
 #                    front is bit-identical (==) to the uninterrupted
 #                    run (the full kill/torn-write matrix is the slow
 #                    lane's test_kill_resume.py)
+#   0c. packed     — packed-integer bank lane parity smoke: error counts
+#                    under bank_format="packed" must equal the f32-banked
+#                    and scalar paths exactly, and the packed weight banks
+#                    must be >= 4x smaller in bytes (the full matrix is
+#                    tests/test_packed_banks.py)
 #
-# Usage: tools/check.sh [analyze|api|resilience|fast|slow|bench]
+# Usage: tools/check.sh [analyze|api|resilience|packed|fast|slow|bench]
 #        (no argument = all)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -114,6 +119,41 @@ print("resilience OK: resumed front bit-identical to the uninterrupted run")
 PY
 }
 
+run_packed() {
+  echo "== packed lane smoke: packed == f32 == scalar, banks >= 4x smaller =="
+  python - <<'PY'
+import numpy as np
+
+from repro.core import quantization as Q
+from repro.core import sru_experiment as X
+
+trained = X.train_small_sru(steps=40)
+names = list(trained.layer_names)
+allocs = [{n: (b, 8) for n in names} for b in (2, 4, 8, 16)]
+scalar = [trained.val_error(a) for a in allocs]
+assert trained.val_error_batch(allocs, bank_format="packed") == scalar, \
+    "packed-bank error counts diverged from the scalar path"
+assert trained.val_error_batch(allocs, use_banks=True) == scalar, \
+    "f32-bank error counts diverged from the scalar path"
+
+def w_bytes(banks, packed):
+    total = 0
+    for name in names:
+        nodes = ([banks[name][d] for d in ("fwd", "bwd")]
+                 if name.startswith("L") else [banks[name]])
+        for node in nodes:
+            w = node["W"]
+            total += (Q.packed_bank_nbytes(w) if packed
+                      else w.size * w.dtype.itemsize)
+    return total
+
+pb = w_bytes(trained.make_packed_banks(trained.params), True)
+fb = w_bytes(trained.make_banks(trained.params), False)
+assert fb / pb >= 4.0, f"packed banks only {fb / pb:.2f}x smaller"
+print(f"packed lane OK: errors bit-identical, banks {fb / pb:.2f}x smaller")
+PY
+}
+
 run_fast() {
   echo "== fast lane: pytest -m 'not slow' =="
   python -m pytest -x -q -m "not slow"
@@ -134,12 +174,13 @@ case "$stage" in
   analyze) run_analyze ;;
   api)   run_api_smoke; run_resilience ;;
   resilience) run_resilience ;;
-  fast)  run_api_smoke; run_resilience; run_fast ;;
+  packed) run_packed ;;
+  fast)  run_api_smoke; run_resilience; run_packed; run_fast ;;
   slow)  run_slow ;;
   bench) run_bench ;;
-  all)   run_analyze; run_api_smoke; run_resilience; run_fast; run_slow
-         run_bench ;;
-  *)     echo "unknown stage: $stage (want analyze|api|resilience|fast|slow|bench)" >&2
+  all)   run_analyze; run_api_smoke; run_resilience; run_packed; run_fast
+         run_slow; run_bench ;;
+  *)     echo "unknown stage: $stage (want analyze|api|resilience|packed|fast|slow|bench)" >&2
          exit 2 ;;
 esac
 echo "== check.sh: all requested stages passed =="

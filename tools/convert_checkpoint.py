@@ -1,0 +1,182 @@
+"""Offline converter: trained model + chosen allocation(s) -> packed
+deployment artifact.
+
+The search pipeline carries f32 fake-quant banks for speed; what a target
+device ships is the PACKED form — integer codes in their natural containers
+plus grid scales (``quantization.build_packed_weight_bank``), >= 4x smaller
+and bit-identical after dequantization. This tool freezes that form on disk:
+
+    artifact/
+      packed_banks.bin   checksummed (durable_io.write_checksummed) npz of
+                         the packed banks + the extras the banked forward
+                         needs beyond them (the FC bias)
+      manifest.json      model config, menu, chosen allocations with their
+                         (w, a) quantization-grid rows, payload digest and
+                         byte accounting — everything a server needs; no
+                         calibration state required at load time
+
+Round-trip contract (asserted in tests/test_packed_banks.py): a reloaded
+artifact is leaf-for-leaf bit-identical to freshly built packed banks, and
+serving ``forward_population`` from it reproduces the search-time error
+counts exactly.
+
+CLI (offline, writes one artifact):
+
+    PYTHONPATH=src python tools/convert_checkpoint.py --out DIR \
+        [--steps 40] [--bits 2,4,8,16]
+
+trains the small search model and packs one uniform allocation per value of
+``--bits`` (stand-ins for Pareto-front picks; library callers pass real
+front allocations to ``pack_deployment``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import io
+import json
+import os
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import durable_io
+from repro.core import quantization as Q
+
+ARTIFACT_VERSION = 1
+PAYLOAD_NAME = "packed_banks.bin"
+MANIFEST_NAME = "manifest.json"
+
+
+def _nest(flat: Dict[str, np.ndarray]) -> dict:
+    """Inverse of durable_io.flatten_tree for plain nested dicts."""
+    tree: dict = {}
+    for key, leaf in flat.items():
+        node = tree
+        parts = key.split(durable_io.SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+def _bank_weight_bytes(trained, banks) -> int:
+    """Bytes of the per-layer 'W' bank nodes (what the format changes)."""
+    total = 0
+    for name in trained.cfg.layer_names():
+        nodes = ([banks[name][d] for d in ("fwd", "bwd")]
+                 if name.startswith("L") else [banks[name]])
+        for node in nodes:
+            total += Q.packed_bank_nbytes(node["W"])
+    return total
+
+
+def pack_deployment(trained, allocs: Sequence[Dict[str, tuple]],
+                    out_dir: str) -> dict:
+    """Write the packed artifact for ``trained`` under ``out_dir`` and
+    return the manifest. ``allocs``: the chosen per-layer (w_bits, a_bits)
+    allocations (e.g. Pareto-front picks); their quantization-grid rows are
+    frozen into the manifest so serving needs no calibration state."""
+    os.makedirs(out_dir, exist_ok=True)
+    banks = trained.make_packed_banks(trained.params)
+    extras = {"FC": {"b": trained.params["FC"]["b"]}}
+    tree = {"banks": banks, "extras": extras}
+
+    buf = io.BytesIO()
+    np.savez(buf, **{k: np.asarray(v)
+                     for k, v in durable_io.flatten_tree(tree).items()})
+    durable_io.write_checksummed(os.path.join(out_dir, PAYLOAD_NAME),
+                                 buf.getvalue())
+
+    names = list(trained.cfg.layer_names())
+    f32_banks = trained.make_banks(trained.params)
+    packed_b = _bank_weight_bytes(trained, banks)
+    f32_b = _bank_weight_bytes(trained, f32_banks)
+    manifest = {
+        "version": ARTIFACT_VERSION,
+        "payload": PAYLOAD_NAME,
+        "tree_digest": durable_io.tree_digest(tree),
+        "model": dataclasses.asdict(trained.cfg),
+        "menu": list(trained.menu),
+        "layer_names": names,
+        "allocs": [{n: [int(a[n][0]), int(a[n][1])] for n in names}
+                   for a in allocs],
+        # per alloc, per layer: the 6-float (w_scale, w_lo, w_hi,
+        # a_scale, a_lo, a_hi) grid row — forward_population's qp stack
+        "qp": [[[float(v) for v in trained.qp_for(a)[n]] for n in names]
+               for a in allocs],
+        "bytes": {"packed_weight_banks": packed_b,
+                  "f32_weight_banks": f32_b,
+                  "ratio": f32_b / packed_b},
+    }
+    durable_io.atomic_write_bytes(
+        os.path.join(out_dir, MANIFEST_NAME),
+        json.dumps(manifest, indent=1).encode())
+    return manifest
+
+
+def load_deployment(out_dir: str):
+    """Read back (manifest, banks, extras); raises
+    ``durable_io.CorruptFileError`` on a torn/corrupt payload and
+    ``ValueError`` when the payload does not match the manifest digest."""
+    with open(os.path.join(out_dir, MANIFEST_NAME), "rb") as f:
+        manifest = json.loads(f.read().decode())
+    payload = durable_io.read_checksummed(os.path.join(out_dir,
+                                                       manifest["payload"]))
+    with np.load(io.BytesIO(payload)) as z:
+        tree = _nest({k: z[k] for k in z.files})
+    digest = durable_io.tree_digest(tree)
+    if digest != manifest["tree_digest"]:
+        raise ValueError(f"{out_dir}: payload digest {digest} does not "
+                         f"match manifest {manifest['tree_digest']}")
+    return manifest, tree["banks"], tree["extras"]
+
+
+def serving_params(manifest: dict, extras: dict) -> dict:
+    """Minimal parameter skeleton for ``forward_population(banks=...)``:
+    the banked lanes read weights from the banks, so the artifact only
+    carries the FC bias — everything else is structural."""
+    params: dict = {}
+    for name in manifest["layer_names"]:
+        params[name] = ({"fwd": {}, "bwd": {}} if name.startswith("L")
+                        else {})
+    params["FC"] = {"b": extras["FC"]["b"]}
+    return params
+
+
+def qp_stack(manifest: dict) -> np.ndarray:
+    """(P, L, 6) float32 qp grid stack of the packed allocations — ready
+    for ``forward_population`` (one lane per packed allocation)."""
+    return np.asarray(manifest["qp"], np.float32)
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--out", required=True, help="artifact directory")
+    ap.add_argument("--steps", type=int, default=40,
+                    help="training steps for the demo model")
+    ap.add_argument("--bits", default="2,4,8,16",
+                    help="comma list: one uniform (b, 8)-allocation each")
+    args = ap.parse_args(argv)
+
+    from repro.core import sru_experiment as X
+    trained = X.train_small_sru(steps=args.steps)
+    menu = tuple(trained.menu)
+    allocs = []
+    for b in (int(s) for s in args.bits.split(",")):
+        if b not in menu:
+            raise SystemExit(f"--bits {b} not in menu {menu}")
+        allocs.append({n: (b, 8) for n in trained.layer_names})
+    manifest = pack_deployment(trained, allocs, args.out)
+    _m, banks, _x = load_deployment(args.out)   # verify round trip
+    del banks
+    by = manifest["bytes"]
+    print(f"wrote {args.out}: {len(allocs)} allocation(s), "
+          f"packed weight banks {by['packed_weight_banks']} B "
+          f"({by['ratio']:.2f}x smaller than f32 banks), "
+          f"digest {manifest['tree_digest'][:12]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
