@@ -913,6 +913,172 @@ def search_pipeline_v2(full: bool = False, quick: bool = False,
     return ok
 
 
+def serving_family(quick: bool = False) -> bool:
+    """Serving-tier throughput (PR 9): continuous batching over the packed
+    deployment artifact vs the naive per-allocation-group serial baseline.
+
+    All measurements are SAME-RUN and parity-gated first: before any
+    timing, every front allocation's decode-step lane is asserted bitwise
+    equal to the scalar ``forward(qp=)`` path, and one collected drain run
+    re-checks parity per request. Then:
+
+      - ``serving_drain``: a fixed backlog (every request submitted up
+        front) drained by the ContinuousBatcher (one mixed-allocation
+        dispatch per step) and the SerialGroupBatcher (one dispatch per
+        live allocation per step, same engine/admission/chunking).
+        All bucket shapes are warmed before timing and the trials are
+        interleaved (this box's CPU allocation is noisy); best-of-trials
+        tokens/sec per batcher. HARD gate: continuous >= 1.5x serial.
+      - ``serving_open_loop_*``: open-loop Poisson arrivals (seeded
+        exponential gaps) at two rates scaled from the measured drain
+        capacity; reports tokens/sec, p50/p99 step latency, shed count.
+
+    Writes BENCH_serving.json (passing non-quick runs only — same policy
+    as BENCH_search_throughput.json) and returns False on a gate miss."""
+    import tempfile
+
+    from repro import serving as S
+    from repro.core import sru_experiment as X
+    from repro.models import sru
+    from tools import convert_checkpoint as CC
+
+    trained = X.train_small_sru(steps=20 if quick else 40)
+    names = list(trained.layer_names)
+    allocs = [{n: (b, 8) for n in names} for b in (2, 4, 8)]
+    objectives = [{"error": 9.0}, {"error": 5.0}, {"error": 2.0}]
+    chunk, max_lanes = 16, 8
+    req_frames = 2 * chunk                       # two full chunks/request
+    n_req = 24 if quick else 48
+    n_trials = 2 if quick else 4
+    slos = ("premium", "standard", "economy")
+    rng = np.random.default_rng(0)
+    m = trained.cfg.input_dim
+    feats_pool = [rng.normal(size=(req_frames, m)).astype(np.float32)
+                  for _ in range(n_req)]
+
+    def mk_router():
+        # routing must stay purely SLO-driven while the whole backlog sits
+        # in the queue: disable admission/load bounds for the bench
+        return S.Router(art, max_queue=10 ** 9, shed_depth=10 ** 9)
+
+    def mk_requests():
+        return [S.Request(rid=i, slo=slos[i % 3], feats=feats_pool[i])
+                for i in range(n_req)]
+
+    def drain(cls, collect=False):
+        bat = cls(engine, mk_router(), max_lanes=max_lanes, chunk=chunk,
+                  collect=collect)
+        for r in mk_requests():
+            bat.submit(r)
+        return bat, bat.run_until_idle()
+
+    with tempfile.TemporaryDirectory() as d:
+        CC.pack_deployment(trained, allocs, d, objectives=objectives)
+        art = S.DeploymentArtifact.load(d)
+        engine = S.ServingEngine(art)
+
+        # ---- parity gates (before any timing) -------------------------
+        lane_feats = np.stack([f[:chunk] for f in feats_pool[:3]])
+        logits = sru.forward_decode_step(engine.params, art.cfg,
+                                         jnp.asarray(lane_feats),
+                                         jnp.asarray(art.qp),
+                                         banks=engine.banks)
+        for lane, alloc in enumerate(allocs):
+            ref = sru.forward(trained.params, trained.cfg,
+                              lane_feats[lane][None],
+                              qp=trained.qp_for(alloc))[0]
+            assert np.array_equal(np.asarray(logits[lane]),
+                                  np.asarray(ref)), \
+                f"decode-step lane {lane} != scalar forward(qp=)"
+        # warm every bucket shape both batchers and the open-loop runs can
+        # hit (the gate reads steady-state throughput, never compile time;
+        # lightly-loaded open-loop steps land in the small lane buckets,
+        # which a full-backlog drain alone never touches), and re-check
+        # parity per served request on the collected continuous drain
+        bat, log = drain(S.ContinuousBatcher, collect=True)
+        for b in bat.buckets:
+            engine.step(np.zeros((b, chunk, m), np.float32),
+                        art.qp_rows([0] * b))
+        drain(S.SerialGroupBatcher)
+        for r in mk_requests():
+            qp = trained.qp_for(allocs[log.requests[r.rid].alloc])
+            ref = np.concatenate([
+                np.asarray(sru.forward(trained.params, trained.cfg,
+                                       r.feats[s:s + chunk][None], qp=qp))[0]
+                for s in range(0, req_frames, chunk)])
+            assert np.array_equal(bat.results[r.rid], ref), \
+                f"served request {r.rid} != chunked scalar forward(qp=)"
+
+        # ---- backlog drain: continuous vs serial, interleaved ----------
+        cont_runs, ser_runs = [], []
+        for _ in range(n_trials):
+            cont_runs.append(drain(S.ContinuousBatcher)[1].summary())
+            ser_runs.append(drain(S.SerialGroupBatcher)[1].summary())
+        cont = max(cont_runs, key=lambda s: s["tokens_per_s"])
+        ser = max(ser_runs, key=lambda s: s["tokens_per_s"])
+        ratio = cont["tokens_per_s"] / max(ser["tokens_per_s"], 1e-9)
+        emit("serving_drain_continuous", cont["p50_s"] * 1e6,
+             f"tok_s={cont['tokens_per_s']:.0f};steps={cont['n_steps']};"
+             f"dispatches={cont['n_dispatches']};n_req={n_req};"
+             f"p99_step_us={cont['p99_s'] * 1e6:.1f}")
+        emit("serving_drain_serial", ser["p50_s"] * 1e6,
+             f"tok_s={ser['tokens_per_s']:.0f};steps={ser['n_steps']};"
+             f"dispatches={ser['n_dispatches']};"
+             f"continuous_vs_serial={ratio:.2f}x")
+
+        # ---- open-loop Poisson arrivals at 2 rates ---------------------
+        cap_rps = cont["tokens_per_s"] / req_frames   # requests/s capacity
+        open_rows = []
+        for seed, (tag, frac) in enumerate((("low", 0.4), ("high", 0.8))):
+            rate = max(cap_rps * frac, 1e-3)
+            gaps = np.random.default_rng(seed).exponential(1.0 / rate,
+                                                           n_req)
+            arrivals = np.cumsum(gaps)
+            bat = S.ContinuousBatcher(engine, mk_router(),
+                                      max_lanes=max_lanes, chunk=chunk)
+            reqs, i, t0 = mk_requests(), 0, time.perf_counter()
+            while i < n_req or bat.queue or bat.lanes:
+                now = time.perf_counter() - t0
+                while i < n_req and arrivals[i] <= now:
+                    bat.submit(reqs[i])
+                    i += 1
+                if bat.lanes or bat.queue:
+                    bat.step()
+                elif i < n_req:
+                    time.sleep(min(arrivals[i] - now, 0.005))
+            s = bat.log.summary()
+            s.update(rate_rps=rate, load_fraction=frac)
+            open_rows.append(s)
+            emit(f"serving_open_loop_{tag}", s["p99_s"] * 1e6,
+                 f"rate_rps={rate:.1f};tok_s={s['tokens_per_s']:.0f};"
+                 f"n_shed={s['n_shed']};queue_mean_ms="
+                 f"{s.get('queue_mean_s', 0.0) * 1e3:.2f}")
+
+    ok = True
+    if ratio < 1.5:
+        print(f"REGRESSION: continuous batching only {ratio:.2f}x the "
+              f"serial per-allocation baseline tokens/sec (same-run floor "
+              f"1.5x: one mixed-allocation dispatch per step must beat "
+              f"{len(allocs)} per-group dispatches)")
+        ok = False
+    if any(s["n_completed"] != n_req for s in open_rows):
+        print("REGRESSION: open-loop serving dropped requests with "
+              "admission bounds disabled")
+        ok = False
+    if ok and not quick:
+        with open("BENCH_serving.json", "w") as f:
+            json.dump({"drain": {"continuous": cont, "serial": ser,
+                                 "continuous_vs_serial": ratio,
+                                 "gate_floor": 1.5, "n_requests": n_req,
+                                 "frames_per_request": req_frames,
+                                 "chunk": chunk, "max_lanes": max_lanes},
+                       "open_loop": open_rows}, f, indent=2)
+    elif not ok:
+        print("BENCH_serving.json left untouched (regressing run does not "
+              "reset the reference)")
+    return ok
+
+
 def run_search_for_bench(prob, gens, pop):
     from repro.core.mohaq import run_search
     return run_search(prob, n_generations=gens, pop_size=pop,
@@ -1005,11 +1171,16 @@ def main() -> None:
     roofline_table()
     ok = search_pipeline_v2(args.full, quick=args.quick,
                             rebaseline=args.rebaseline)
+    ok_serve = serving_family(quick=args.quick)
     if not args.quick:
         fig7_10_search(args.full)
     if not ok:
         print("search_pipeline_v2: v2 throughput regressed below the "
               "stored PR-1 numbers", file=sys.stderr)
+    if not ok_serve:
+        print("serving_family: continuous-batching serving gate missed",
+              file=sys.stderr)
+    if not (ok and ok_serve):
         sys.exit(1)
 
 

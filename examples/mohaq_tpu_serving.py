@@ -23,6 +23,12 @@ and the demo asserts the sharded search's Pareto front is bit-identical to
 the single-device one. On a TPU slice each candidate shard lands on its
 own chip; on CPU, force a mesh with the XLA host-device flag below.
 
+``--serve-demo`` closes the loop search-side to serving-side: a
+checkpointed SRU search's Pareto front is packed into the deployment
+artifact (``convert_checkpoint.front_from_store``) and served through
+``repro.serving`` — SLO-routed, continuously batched, parity-gated
+against the scalar ``forward(qp=)`` path.
+
 Testing
 -------
 The mesh-parity lane covers this path:
@@ -90,6 +96,78 @@ def sharded_demo():
           f"single-device: {t_single:.1f}s; fronts BIT-IDENTICAL "
           f"({len(res_m.pareto)} solutions, {res_m.n_evals} unique evals)")
     print(res_m.format(with_test=False))
+
+
+def serve_demo():
+    """Search -> checkpoint -> pack the front -> serve it, end to end.
+
+    The deployment half of the demo: a checkpointed SRU search leaves a
+    ``SearchStore`` behind, ``convert_checkpoint.front_from_store`` pulls
+    the finished Pareto front (allocations + objective rows) out of it,
+    and the ``repro.serving`` tier serves live traffic across that front —
+    SLO classes route onto the stored objective rows and every decode step
+    is ONE mixed-allocation ``forward_decode_step`` dispatch over the
+    packed banks (no f32 weights rebuilt, no per-allocation fan-out).
+    Serving is parity-gated in-demo: each request's logits must be bitwise
+    equal to the scalar ``forward(qp=)`` path under its allocation.
+    """
+    import sys
+    import tempfile
+
+    import numpy as np
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))           # repo root for `tools.*`
+    from repro import serving as S
+    from repro.core import sru_experiment as X
+    from repro.core.api import SearchSession
+    from repro.models import sru
+    from tools import convert_checkpoint as CC
+
+    trained = X.train_small_sru(steps=40)
+    with tempfile.TemporaryDirectory() as root:
+        ckpt = os.path.join(root, "ckpt")
+        SearchSession(trained, "bitfusion", ("error", "speedup"),
+                      share_memo=False).run(generations=2, pop=6, initial=8,
+                                            seed=0, checkpoint_dir=ckpt)
+        allocs, rows = CC.front_from_store(ckpt, trained)
+        out = os.path.join(root, "artifact")
+        manifest = CC.pack_deployment(trained, allocs, out, objectives=rows)
+        art = S.DeploymentArtifact.load(out)
+    by = manifest["bytes"]
+    print(f"packed front: {art.n_allocs} allocations from the checkpointed "
+          f"search ({by['packed_weight_banks']/1e3:.0f}kB banks, "
+          f"{by['ratio']:.2f}x smaller than f32)")
+    router = S.Router(art)
+    for c in router.classes:
+        dec = router.route(c.name)
+        row = art.objectives[dec.alloc]
+        print(f"  SLO {c.name:>8s} -> allocation {dec.alloc}: error "
+              f"{row['error']:.2f}%, speedup {row.get('speedup', 0.0):.2f}x,"
+              f" {row['cost_bits']:.1f} mean weight bits")
+    bat = S.ContinuousBatcher(S.ServingEngine(art), router, max_lanes=4,
+                              chunk=16, collect=True)
+    rng = np.random.default_rng(0)
+    dim = art.cfg.input_dim
+    reqs = [S.Request(rid=i, slo=("premium", "standard", "economy")[i % 3],
+                      feats=rng.normal(size=(32, dim)).astype(np.float32))
+            for i in range(9)]
+    for r in reqs:
+        bat.submit(r)
+    log = bat.run_until_idle()
+    for r in reqs:
+        qp = trained.qp_for(art.allocs[log.requests[r.rid].alloc])
+        ref = np.concatenate([
+            np.asarray(sru.forward(trained.params, trained.cfg,
+                                   r.feats[s:s + 16][None], qp=qp))[0]
+            for s in range(0, 32, 16)])
+        assert np.array_equal(bat.results[r.rid], ref), \
+            f"request {r.rid} diverged from the scalar path"
+    s = log.summary()
+    print(f"served {s['n_completed']} requests across "
+          f"{len(router.classes)} SLO classes in {s['n_dispatches']} "
+          f"dispatches ({s['tokens_per_s']:.0f} frames/s) — logits bitwise "
+          f"== scalar forward(qp=)")
 
 
 def main():
@@ -175,5 +253,13 @@ if __name__ == "__main__":
     ap.add_argument("--sharded-demo", action="store_true",
                     help="run the mesh-sharded SRU population search demo "
                          "instead of the deepseek-67b roofline search")
+    ap.add_argument("--serve-demo", action="store_true",
+                    help="run the checkpointed-search -> packed-artifact "
+                         "-> SLO-routed serving demo (repro.serving)")
     args = ap.parse_args()
-    sharded_demo() if args.sharded_demo else main()
+    if args.serve_demo:
+        serve_demo()
+    elif args.sharded_demo:
+        sharded_demo()
+    else:
+        main()

@@ -6,11 +6,14 @@ deployment artifact.
 Demonstrates the TPU adaptation of the paper (DESIGN.md): int4/int2 weights
 packed in int8 containers, dequantized in-kernel. On this CPU container the
 kernel runs in interpret mode; on TPU the same call compiles to MXU ops.
-The population-serving half goes through ``tools/convert_checkpoint.py``:
-a trained search model + its chosen allocations are frozen into a packed
-artifact (int codes + scales + manifest, >= 4x smaller than the f32 banks)
-and served via ``forward_population(banks=...)`` with no f32 weight tensor
-shipped at all — the deployment path ISSUE 8 / ROADMAP direction 2 asks for.
+The population-serving half goes through ``tools/convert_checkpoint.py``
+and the ``repro.serving`` tier: a trained search model + its chosen
+allocations are frozen into a packed artifact (int codes + scales +
+manifest, >= 4x smaller than the f32 banks), an SLO router picks each
+request's operating point off the stored front, and the continuous
+batcher serves the whole mixed-allocation batch in ONE
+``forward_decode_step`` dispatch per step — no f32 weight tensor shipped
+at all, and no per-allocation dispatch fan-out.
 
 Run: PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -90,22 +93,22 @@ def main():
     print(f"int4 kernel vs dense head: max abs err {err:.3f} (rel {rel:.3f}) "
           f"- int4 quantization noise, as expected")
 
-    # --- population serving from a packed deployment artifact -------------
+    # --- Pareto-front-as-a-service from the packed artifact ---------------
     # The search-loop substrate (forward_population's explicit population
-    # axis) doubles as a serving substrate, and the deployment form is the
-    # PACKED artifact written by tools/convert_checkpoint.py: a trained
-    # model + chosen allocations (e.g. the Pareto front) freeze into int
-    # codes + per-grid scales — >= 4x smaller than the f32 banks, dequantized
-    # in-trace to bit-identical rows. The server then replays every
-    # operating point in ONE dispatch from the artifact alone: weights come
-    # from the containers, the manifest carries the qp grids, and the only
-    # raw parameter shipped is the FC bias. The designer (or an SLA-aware
-    # router) picks the accuracy/latency point per request.
+    # axis) doubles as a serving substrate: ``repro.serving`` loads the
+    # PACKED artifact written by tools/convert_checkpoint.py once, a Router
+    # maps each request's SLO class onto the stored front, and the
+    # ContinuousBatcher runs every decode step as ONE mixed-allocation
+    # dispatch — lane i's scalar-prefetched menu index IS request i's
+    # allocation, so adding an operating point never adds a dispatch.
     import os
     import sys
     import tempfile
+
+    import numpy as np
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))           # repo root for `tools.*`
+    from repro import serving as S
     from repro.core import sru_experiment as X
     from repro.models import sru
     from tools import convert_checkpoint as CC
@@ -113,25 +116,44 @@ def main():
     trained = X.train_small_sru(steps=8)
     names = list(trained.layer_names)
     presets = [{n: (b, 8) for n in names} for b in (2, 4, 8, 16)]
+    objectives = [{"error": 12.0}, {"error": 7.0}, {"error": 3.0},
+                  {"error": 1.0}]              # front-row stand-ins
     with tempfile.TemporaryDirectory() as d:
-        manifest = CC.pack_deployment(trained, presets, d)
-        m, banks, extras = CC.load_deployment(d)
+        manifest = CC.pack_deployment(trained, presets, d,
+                                      objectives=objectives)
+        art = S.DeploymentArtifact.load(d)
     by = manifest["bytes"]
-    print(f"packed artifact: {len(presets)} allocations, weight banks "
+    print(f"packed artifact: {art.n_allocs} allocations, weight banks "
           f"{by['packed_weight_banks']/1e3:.0f}kB "
           f"({by['ratio']:.2f}x smaller than f32 banks)")
-    sparams = CC.serving_params(m, extras)     # FC bias only — no f32 W
-    qp_stack = jnp.asarray(CC.qp_stack(m))
-    feats = trained.val_subsets[0][0]
-    pop_fwd = jax.jit(lambda p, f, q, b: sru.forward_population(
-        p, trained.cfg, f, q, banks=b))
-    logits = jax.block_until_ready(pop_fwd(sparams, feats, qp_stack, banks))
-    t0 = time.time()
-    jax.block_until_ready(pop_fwd(sparams, feats, qp_stack, banks))
-    dt = time.time() - t0
-    print(f"population serving: {len(presets)} allocations x "
-          f"{feats.shape[0]} seqs in one dispatch -> logits {logits.shape} "
-          f"({dt*1e3:.1f} ms/dispatch, {dt*1e3/len(presets):.2f} ms/alloc)")
+    router = S.Router(art)
+    for c in router.classes:
+        dec = router.route(c.name)
+        row = art.objectives[dec.alloc]
+        print(f"  SLO {c.name:>8s} -> allocation {dec.alloc} "
+              f"(error {row['error']:.0f}%, {row['cost_bits']:.1f} mean "
+              f"weight bits)")
+    bat = S.ContinuousBatcher(S.ServingEngine(art), router, max_lanes=4,
+                              chunk=16, collect=True)
+    rng = np.random.default_rng(0)
+    dim = art.cfg.input_dim
+    reqs = [S.Request(rid=i, slo=("premium", "standard", "economy")[i % 3],
+                      feats=rng.normal(size=(32, dim)).astype(np.float32))
+            for i in range(6)]
+    for r in reqs:
+        bat.submit(r)
+    log = bat.run_until_idle()
+    for r in reqs:                             # served == scalar, bitwise
+        qp = trained.qp_for(presets[log.requests[r.rid].alloc])
+        ref = jnp.concatenate([
+            sru.forward(trained.params, trained.cfg, r.feats[s:s + 16][None],
+                        qp=qp)[0] for s in range(0, 32, 16)])
+        assert np.array_equal(bat.results[r.rid], np.asarray(ref)), r.rid
+    s = log.summary()
+    print(f"served {s['n_completed']} requests over 3 SLO classes in "
+          f"{s['n_dispatches']} dispatches ({s['n_steps']} steps, "
+          f"{s['tokens_per_s']:.0f} frames/s) — logits bitwise == the "
+          f"scalar forward(qp=) path")
 
 
 if __name__ == "__main__":

@@ -196,9 +196,7 @@ class XLSTMTarget:
     baseline_val_error: float = 0.0
     baseline_test_error: float = 0.0
 
-    # no QAT loop is wired for this target yet: SearchSession(beacons=True)
-    # raises instead of silently skipping retrains
-    supports_retrain = False
+    supports_retrain = True            # SearchTarget: beacons available
 
     def __post_init__(self):
         self.shared_error_memo: Dict[tuple, float] = {}
@@ -249,6 +247,36 @@ class XLSTMTarget:
         never searchable): ~32 ops per inner-dim element per block. Only
         shifts the Eq. 4 speedup normalization."""
         return 32 * self.cfg.ssm_d_inner * self.cfg.n_layers
+
+    # ---- beacon retraining ----
+
+    def beacon_retrainer(self, retrain_steps: int = 60, *,
+                         skip_retrains: int = 0):
+        """One retraining context per search (the SRU target's contract,
+        verbatim): the returned ``retrain_fn(alloc, base_params)`` draws
+        successive batches from a single seeded token stream, so the k-th
+        retrain of any search sees identical data regardless of which
+        alloc triggered it. ``skip_retrains`` fast-forwards the stream
+        past the first N retrains (each consumes exactly ``retrain_steps``
+        batches) so checkpoint-resumed searches stay bit-deterministic."""
+        from repro.training import qat
+        data = synthetic.lm_batches(
+            self.cfg.vocab_size, 8, 33, seed=3,
+            start_step=skip_retrains * retrain_steps, n_noise=N_NOISE)
+
+        def retrain_fn(alloc: Alloc, base_params):
+            wclips = {n: self.wclips[(n, a[0])]
+                      for n, a in alloc.items() if a[0] != 16}
+            return qat.retrain_xlstm(base_params, self.cfg, alloc, data,
+                                     steps=retrain_steps,
+                                     act_ranges=self.act_ranges,
+                                     wclips=wclips)
+        return retrain_fn
+
+    def retrain(self, alloc: Alloc, base_params=None, *, steps: int = 60):
+        """One-off binary-connect retrain under ``alloc`` (fresh stream)."""
+        base = self.params if base_params is None else base_params
+        return self.beacon_retrainer(steps)(alloc, base)
 
     # ---- quantization-grid plumbing ----
 

@@ -148,6 +148,22 @@ def bank_qmm_pop(x, packed, idx, interpret=None):
     return out[:, :M, :N]
 
 
+def bank_step(x, bank, idx, interpret=None):
+    """Step-shaped serving front door for the bank-gather MxV kernels.
+
+    x: (P, T, m) — lane *i* is request *i*'s current chunk (the serving
+    tier's population-axis-as-request-axis layout, already the (P, M, m)
+    shape the population kernels take); ``bank`` is either a f32
+    (K, m, N) menu stack (-> ``bank_mxv_pop``) or a packed-integer bank
+    dict (-> ``bank_qmm_pop``, dequantizes in-kernel); idx: (P,) menu
+    indices, one per request. Returns (P, T, N). Not itself jitted — it
+    only dispatches to the jitted kernels, so callers can close over it
+    inside their own jit without double-tracing."""
+    if isinstance(bank, dict):
+        return bank_qmm_pop(x, bank, idx, interpret=interpret)
+    return bank_mxv_pop(x, bank, idx, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def sru_scan_pop(uw, uf, ur, v_f, v_r, b_f, b_r, interpret=None):
     """Padded/jitted population-axis SRU scan. uw/uf/ur: (P, B, T, n) — one

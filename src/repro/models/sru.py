@@ -377,6 +377,9 @@ def forward_population(params, cfg: SRUModelConfig, feats, qp_stack,
         if banks is not None:
             raise ValueError("banks require the fused or kernel lowering "
                              "(the PR-1 vmap reference stays requantizing)")
+        if feats.ndim == 4:
+            raise ValueError("per-lane feats (P, B, T, m) require the fused "
+                             "or kernel lowering")
         names = cfg.layer_names()
 
         def one(qp_rows):                                  # (L, 6) per lane
@@ -439,7 +442,8 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
                               use_kernel: bool = False, banks=None):
     """Explicit population-axis forward (see ``forward_population``).
 
-    feats (B, T, m) is broadcast to (P, B, T, m); per-lane weight/activation
+    feats (B, T, m) is broadcast to (P, B, T, m) — or passed pre-stacked as
+    (P, B, T, m) with one input per lane; per-lane weight/activation
     grids come from qp_stack rows. Per-lane quantized weights are either
     requantized on the fly (``banks=None``) or gathered from the
     precomputed banks by menu index — bitwise identical, but the gather
@@ -506,16 +510,23 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
         packed banks additionally dequantize in-kernel (bank_qmm_pop)."""
         if banks is not None and use_kernel:
             from repro.kernels import ops as kops
-            w = raw_bank(name, sub)
             x2 = xq.reshape(P, -1, xq.shape[-1])
-            if isinstance(w, dict):
-                u = kops.bank_qmm_pop(x2, w, w_idx[:, li[name]])
-            else:
-                u = kops.bank_mxv_pop(x2, w, w_idx[:, li[name]])
+            u = kops.bank_step(x2, raw_bank(name, sub), w_idx[:, li[name]])
             return u.reshape(xq.shape[:3] + (u.shape[-1],))
         return mxv(xq, lane_w(name, sub))
 
-    x = jnp.broadcast_to(feats, (P,) + feats.shape)          # (P,B,T,m)
+    # feats (B, T, m): one shared input scored under P candidate grids
+    # (the search substrate). feats (P, B, T, m): one input PER LANE —
+    # the serving tier's population-axis-as-request-axis contract, where
+    # lane i carries request i's frames under request i's allocation.
+    # Every downstream op is already per-lane, so only this entry differs.
+    if feats.ndim == 4:
+        if feats.shape[0] != P:
+            raise ValueError(f"per-lane feats lead axis {feats.shape[0]} "
+                             f"!= population size {P}")
+        x = feats                                            # (P,B,T,m)
+    else:
+        x = jnp.broadcast_to(feats, (P,) + feats.shape)      # (P,B,T,m)
     # anchor the population lane on the mesh's "pop" axis (no-op outside an
     # axis_rules context) so the GSPMD lowering of the sharded evaluator
     # partitions candidates instead of replicating them
@@ -525,8 +536,9 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
         lp = params[name]
         # input-layer u-bank (see extend_banks_u0): L0's whole quantize+MxV
         # collapses to one row gather per direction; statically skipped when
-        # the highway would need the quantized input
-        use_u0 = (i == 0 and banks is not None
+        # the highway would need the quantized input, and for per-lane feats
+        # (the u-bank rows are bound to the shared eval fold)
+        use_u0 = (i == 0 and banks is not None and feats.ndim == 3
                   and "U" in banks["L0"]["fwd"] and feats.shape[-1] != n)
         if use_u0:
             a_idx0 = Q.menu_index_from_hi(qp_stack[:, li[name], 5])
@@ -642,6 +654,33 @@ def _forward_population_fused(params, cfg: SRUModelConfig, feats, qp_stack,
     xq = q_act("FC", x)
     logits = mxv_layer(xq, "FC") + params["FC"]["b"]
     return dist_shard(logits, "pop")
+
+
+def forward_decode_step(params, cfg: SRUModelConfig, feats, qp_stack,
+                        banks=None, use_kernel: bool = False):
+    """One serving decode step: P request lanes, one chunk each.
+
+    ``feats``: (P, T, m) — lane *i* holds request *i*'s current chunk of T
+    frames; ``qp_stack``: (P, L, 6) — lane *i*'s row is request *i*'s
+    allocation (its quantization grids, from which the banked dispatch
+    recovers the menu index). This is the serving tier's hot path: the
+    whole mixed-allocation batch is ONE banked population dispatch — the
+    population axis reused as the request axis — so adding a request with
+    a different allocation changes a gather index, not the dispatch count.
+
+    Bi-SRU is bidirectional, so a "step" is chunk-synchronous: each lane's
+    chunk runs the full forward with fresh recurrent state (c0 = 0 per
+    chunk), exactly like the scalar ``forward(qp=)`` on that chunk — the
+    per-chunk logits are bitwise equal to the scalar path, which is the
+    serving parity contract. Returns logits (P, T, n_outputs).
+    """
+    if feats.ndim != 3:
+        raise ValueError(f"decode-step feats must be (P, T, m), got "
+                         f"shape {feats.shape}")
+    logits = _forward_population_fused(params, cfg, feats[:, None],
+                                       qp_stack, use_kernel=use_kernel,
+                                       banks=banks)
+    return logits[:, 0]
 
 
 def calibrate(params, cfg: SRUModelConfig, feats_batches) -> Dict[str, float]:

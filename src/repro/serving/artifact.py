@@ -1,0 +1,163 @@
+"""Deployment-artifact loading for the serving tier.
+
+A ``tools/convert_checkpoint.py`` artifact is a runtime dispatch table:
+the checksummed payload carries the PACKED quantized-weight banks (shared
+by every allocation — int codes + grid scales, dequantized bitwise) plus
+the few raw extras the banked forward needs (the FC bias), and the
+manifest carries the model config, the menu, and one (w, a) quantization-
+grid row per (allocation, layer). ``DeploymentArtifact`` loads all of it
+ONCE and exposes the per-allocation rows the router/batcher index per
+request — under the population-axis-as-request-axis contract (see the
+package docstring), a request's allocation is nothing but the (L, 6) qp
+row stacked into lane *i* of the step dispatch.
+
+The low-level ``load_deployment`` / ``serving_params`` / ``qp_stack``
+helpers live here (the serving tier owns the read side of the format);
+``tools/convert_checkpoint.py`` re-exports them for back-compat and keeps
+the write side (packing needs a trained target).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import durable_io
+from repro.models.sru import SRUModelConfig
+
+ARTIFACT_VERSION = 1
+PAYLOAD_NAME = "packed_banks.bin"
+MANIFEST_NAME = "manifest.json"
+
+Alloc = Dict[str, Tuple[int, int]]
+
+
+def _nest(flat: Dict[str, np.ndarray]) -> dict:
+    """Inverse of durable_io.flatten_tree for plain nested dicts."""
+    tree: dict = {}
+    for key, leaf in flat.items():
+        node = tree
+        parts = key.split(durable_io.SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+def load_deployment(out_dir: str):
+    """Read back (manifest, banks, extras); raises
+    ``durable_io.CorruptFileError`` on a torn/corrupt payload and
+    ``ValueError`` when the payload does not match the manifest digest."""
+    with open(os.path.join(out_dir, MANIFEST_NAME), "rb") as f:
+        manifest = json.loads(f.read().decode())
+    payload = durable_io.read_checksummed(os.path.join(out_dir,
+                                                       manifest["payload"]))
+    with np.load(io.BytesIO(payload)) as z:
+        tree = _nest({k: z[k] for k in z.files})
+    digest = durable_io.tree_digest(tree)
+    if digest != manifest["tree_digest"]:
+        raise ValueError(f"{out_dir}: payload digest {digest} does not "
+                         f"match manifest {manifest['tree_digest']}")
+    return manifest, tree["banks"], tree["extras"]
+
+
+def serving_params(manifest: dict, extras: dict) -> dict:
+    """Minimal parameter skeleton for the banked population/decode
+    forwards: the banked lanes read weights from the banks, so the
+    artifact only carries the FC bias — everything else is structural."""
+    params: dict = {}
+    for name in manifest["layer_names"]:
+        params[name] = ({"fwd": {}, "bwd": {}} if name.startswith("L")
+                        else {})
+    params["FC"] = {"b": extras["FC"]["b"]}
+    return params
+
+
+def qp_stack(manifest: dict) -> np.ndarray:
+    """(P, L, 6) float32 qp grid stack of the packed allocations — ready
+    for ``forward_population`` / ``forward_decode_step`` (one lane per
+    packed allocation)."""
+    L = len(manifest["layer_names"])
+    return np.asarray(manifest["qp"], np.float32).reshape(-1, L, 6)
+
+
+def alloc_cost_bits(alloc: Alloc, counts: Dict[str, int]) -> float:
+    """Latency/cost proxy of an allocation: MAC-weighted mean weight
+    bit-width (``counts``: per-layer MxV weight counts == MACs per frame).
+    Deterministic from the allocation alone, so the router always has a
+    cost ordering even when no search objectives were packed."""
+    total = sum(counts[n] for n in alloc)
+    return sum(counts[n] * alloc[n][0] for n in alloc) / max(total, 1)
+
+
+@dataclass
+class DeploymentArtifact:
+    """One loaded deployment: shared packed banks + per-allocation rows.
+
+    ``objectives[i]`` always carries ``cost_bits`` (recomputed on load —
+    see ``alloc_cost_bits``) and, when the artifact was packed from a real
+    search front, whatever objective values the search stored (``error``,
+    ``speedup``, ...). The router builds its SLO tiers from these rows.
+    """
+    path: str
+    manifest: dict
+    banks: dict
+    extras: dict
+    cfg: SRUModelConfig = field(init=False)
+    allocs: List[Alloc] = field(init=False)
+    qp: np.ndarray = field(init=False)            # (P, L, 6) float32
+    objectives: List[dict] = field(init=False)
+
+    def __post_init__(self):
+        self.cfg = SRUModelConfig(**self.manifest["model"])
+        names = list(self.manifest["layer_names"])
+        if names != list(self.cfg.layer_names()):
+            raise ValueError(
+                f"{self.path}: manifest layer names {names} disagree with "
+                f"the model config's {list(self.cfg.layer_names())}")
+        self.allocs = [{n: (int(a[n][0]), int(a[n][1])) for n in names}
+                       for a in self.manifest["allocs"]]
+        self.qp = qp_stack(self.manifest)
+        counts = self.cfg.layer_weight_counts()
+        stored = self.manifest.get("objectives") or [{}] * len(self.allocs)
+        self.objectives = [
+            {**row, "cost_bits": alloc_cost_bits(a, counts)}
+            for a, row in zip(self.allocs, stored)]
+
+    @classmethod
+    def load(cls, path: str) -> "DeploymentArtifact":
+        manifest, banks, extras = load_deployment(path)
+        return cls(path=path, manifest=manifest, banks=banks, extras=extras)
+
+    @property
+    def n_allocs(self) -> int:
+        return len(self.allocs)
+
+    @property
+    def layer_names(self) -> Tuple[str, ...]:
+        return tuple(self.manifest["layer_names"])
+
+    @property
+    def menu(self) -> Tuple[int, ...]:
+        return tuple(self.manifest["menu"])
+
+    def serving_params(self) -> dict:
+        return serving_params(self.manifest, self.extras)
+
+    def qp_rows(self, lanes: Sequence[int]) -> np.ndarray:
+        """(len(lanes), L, 6) qp stack: lane *i* of the next step dispatch
+        gets allocation ``lanes[i]``'s grid row."""
+        return self.qp[np.asarray(lanes, np.int64)]
+
+    def cost_bits(self, i: int) -> float:
+        return self.objectives[i]["cost_bits"]
+
+    def error(self, i: int):
+        """Stored search error %% of allocation ``i`` (None when the
+        artifact was packed without objective rows)."""
+        v = self.objectives[i].get("error")
+        return None if v is None else float(v)

@@ -44,3 +44,60 @@ def retrain_sru(params, cfg, alloc: Alloc, batches: Iterator[dict],
         params, opt_state, loss = step_fn(params, opt_state,
                                           batch["feats"], batch["labels"])
     return params
+
+
+def retrain_xlstm(params, cfg, alloc: Alloc, batches: Iterator[dict],
+                  *, steps: int = 60, lr: float = 1e-3,
+                  act_ranges=None, wclips=None):
+    """Binary-connect retrain of the registry xLSTM under ``alloc``.
+
+    Same recipe as ``retrain_sru``, expressed through the xLSTM target's
+    quantization hooks: the forward sees STE-quantized weights
+    (``ste_quantize_weight`` of the live full-precision leaves — gradients
+    flow straight through to the masters) and STE fake-quantized block
+    inputs; the AdamW update applies to the full-precision copy. ``wclips``:
+    per-layer clip for the sub-16-bit layers (16-bit layers need none);
+    ``act_ranges``: the target's calibrated per-layer expected ranges
+    (plain python floats — the 16-bit activation grid derives its scale on
+    the host). ``batches`` yield ``{"tokens": (B, T+1)}`` next-token
+    windows; inputs/labels are the usual shift pair. Returns new
+    full-precision params (the beacon)."""
+    from repro.core import xlstm_target as XT
+    from repro.core import quantization as Q
+
+    wclips = wclips or {}
+    act_ranges = act_ranges or {}
+    ocfg = opt.AdamWConfig(lr=lr, schedule="constant", warmup_steps=5,
+                           weight_decay=0.0, total_steps=steps)
+    opt_state = opt.init_opt_state(params)
+    # host-side constants per layer: (w_bits, clip) and (a_bits, range) —
+    # closed over, so every jitted step reuses one trace
+    wq = {n: (int(alloc[n][0]), float(wclips.get(n, 0.0))) for n in alloc}
+    aq = {n: (int(alloc[n][1]), float(act_ranges[n])) for n in alloc}
+
+    def loss_fn(p, toks, labels):
+        def get_w(name):
+            bits, clip = wq[name]
+            return {k: Q.ste_quantize_weight(w, bits, clip)
+                    for k, w in XT._layer_leaves(p, cfg, name).items()}
+
+        def q_act(name, x):
+            bits, rng = aq[name]
+            return Q.quantize_activation(x, bits, rng)
+
+        logits = XT.forward(p, cfg, toks, get_w, q_act)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logp, labels[..., None], axis=-1)
+        return -jnp.mean(gold)
+
+    @jax.jit
+    def step_fn(p, o, toks, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(p, toks, labels)
+        p2, o2, _ = opt.adamw_update(ocfg, p, grads, o)
+        return p2, o2, loss
+
+    for _ in range(steps):
+        toks = next(batches)["tokens"]
+        params, opt_state, loss = step_fn(params, opt_state,
+                                          toks[:, :-1], toks[:, 1:])
+    return params

@@ -4,8 +4,8 @@ Each rule encodes one invariant the runtime parity suites otherwise catch
 minutes into the slow lane (see ROADMAP "Static-analysis gate"):
 
 R1  SeedSequence invariant — no global-RNG use (``np.random.<global fn>``,
-    bare ``random.*``) under core/, distributed/, or any SearchTarget
-    implementation. Seeded ``Generator``/``SeedSequence`` construction is
+    bare ``random.*``) under core/, distributed/, serving/, or any
+    SearchTarget implementation. Seeded ``Generator``/``SeedSequence`` construction is
     the sanctioned idiom and stays allowed.
 R2  Deprecated entrypoints — no calls to the ``sru_experiment`` shims
     (``build_problem``, ``experiment1``-``3``) outside the shim module and
@@ -24,7 +24,8 @@ R5  Parity-frozen dtypes — no ``jnp.float64`` / ``dtype="float64"`` /
     the evaluator's count->percent division deliberately uses it.
 R6  Swallowed exceptions — no bare ``except:`` and no
     ``except Exception/BaseException`` whose body only passes (pass /
-    ``...`` / continue) under core/, distributed/, or kernels/. The
+    ``...`` / continue) under core/, distributed/, kernels/, or
+    serving/. The
     crash-safety work (checkpoint/resume + fault injection) depends on
     failures PROPAGATING so the retry/degradation paths see them; a
     silent handler turns an injected fault into a wrong answer. Retry
@@ -63,6 +64,7 @@ class GlobalRNGRule(Rule):
 
     def applies(self, ctx: ModuleContext) -> bool:
         return ("repro/core/" in ctx.path or "repro/distributed/" in ctx.path
+                or "repro/serving/" in ctx.path
                 or ctx.defines_search_target())
 
     def check(self, ctx: ModuleContext) -> Iterator[Finding]:
@@ -332,7 +334,8 @@ class SwallowedExceptionRule(Rule):
     doc = ("bare/blanket exception handlers that swallow failures in "
            "crash-safety-critical modules")
 
-    _SCOPE = ("repro/core/", "repro/distributed/", "repro/kernels/")
+    _SCOPE = ("repro/core/", "repro/distributed/", "repro/kernels/",
+              "repro/serving/")
     _BLANKET = {"Exception", "BaseException"}
 
     def applies(self, ctx: ModuleContext) -> bool:

@@ -34,8 +34,14 @@
 #                    and scalar paths exactly, and the packed weight banks
 #                    must be >= 4x smaller in bytes (the full matrix is
 #                    tests/test_packed_banks.py)
+#   0d. serve      — serving-tier smoke chained after packed: pack a tiny
+#                    3-allocation artifact, route 8 requests across the 3
+#                    default SLO classes, run them through the continuous
+#                    batcher, and assert every served logit is bitwise ==
+#                    the scalar forward(qp=) path on the same frames (the
+#                    full matrix is tests/test_serving.py)
 #
-# Usage: tools/check.sh [analyze|api|resilience|packed|fast|slow|bench]
+# Usage: tools/check.sh [analyze|api|resilience|packed|serve|fast|slow|bench]
 #        (no argument = all)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -154,6 +160,56 @@ print(f"packed lane OK: errors bit-identical, banks {fb / pb:.2f}x smaller")
 PY
 }
 
+run_serve() {
+  echo "== serving smoke: pack front -> SLO-route 8 requests -> bitwise parity =="
+  python - <<'PY'
+import tempfile
+
+import numpy as np
+
+from repro import serving as S
+from repro.core import sru_experiment as X
+from repro.models import sru
+from tools import convert_checkpoint as CC
+
+trained = X.train_small_sru(steps=40)
+names = list(trained.layer_names)
+allocs = [{n: (b, 8) for n in names} for b in (2, 4, 8)]
+objectives = [{"error": 9.0}, {"error": 5.0}, {"error": 2.0}]
+
+with tempfile.TemporaryDirectory() as d:
+    CC.pack_deployment(trained, allocs, d, objectives=objectives)
+    art = S.DeploymentArtifact.load(d)
+    router = S.Router(art)
+    bat = S.ContinuousBatcher(S.ServingEngine(art), router,
+                              max_lanes=4, chunk=8, collect=True)
+    rng = np.random.default_rng(0)
+    m = art.cfg.input_dim
+    reqs = [S.Request(rid=i, slo=("premium", "standard", "economy")[i % 3],
+                      feats=rng.normal(size=(n, m)).astype(np.float32))
+            for i, n in enumerate([8, 16, 11, 8, 24, 16, 11, 8])]
+    for r in reqs:
+        assert not bat.submit(r).shed
+    log = bat.run_until_idle()
+    assert len(log.completed()) == len(reqs)
+    for r in reqs:
+        alloc = allocs[log.requests[r.rid].alloc]
+        qp = trained.qp_for(alloc)
+        ref = np.concatenate([
+            np.asarray(sru.forward(trained.params, trained.cfg,
+                                   r.feats[s:s + 8][None], qp=qp))[0]
+            for s in range(0, r.feats.shape[0], 8)])
+        assert np.array_equal(bat.results[r.rid], ref), \
+            f"request {r.rid}: served logits != scalar forward(qp=)"
+    by_alloc = sorted({log.requests[r.rid].alloc for r in reqs})
+    assert by_alloc == [0, 1, 2], by_alloc
+    s = log.summary()
+print(f"serving OK: {s['n_completed']} requests over 3 allocations, "
+      f"{s['n_dispatches']} dispatches in {s['n_steps']} steps, "
+      f"served logits bitwise == scalar path")
+PY
+}
+
 run_fast() {
   echo "== fast lane: pytest -m 'not slow' =="
   python -m pytest -x -q -m "not slow"
@@ -175,12 +231,13 @@ case "$stage" in
   api)   run_api_smoke; run_resilience ;;
   resilience) run_resilience ;;
   packed) run_packed ;;
-  fast)  run_api_smoke; run_resilience; run_packed; run_fast ;;
+  serve) run_serve ;;
+  fast)  run_api_smoke; run_resilience; run_packed; run_serve; run_fast ;;
   slow)  run_slow ;;
   bench) run_bench ;;
-  all)   run_analyze; run_api_smoke; run_resilience; run_packed; run_fast
-         run_slow; run_bench ;;
-  *)     echo "unknown stage: $stage (want analyze|api|resilience|packed|fast|slow|bench)" >&2
+  all)   run_analyze; run_api_smoke; run_resilience; run_packed; run_serve
+         run_fast; run_slow; run_bench ;;
+  *)     echo "unknown stage: $stage (want analyze|api|resilience|packed|serve|fast|slow|bench)" >&2
          exit 2 ;;
 esac
 echo "== check.sh: all requested stages passed =="

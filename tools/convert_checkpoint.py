@@ -11,8 +11,10 @@ and bit-identical after dequantization. This tool freezes that form on disk:
                          the packed banks + the extras the banked forward
                          needs beyond them (the FC bias)
       manifest.json      model config, menu, chosen allocations with their
-                         (w, a) quantization-grid rows, payload digest and
-                         byte accounting — everything a server needs; no
+                         (w, a) quantization-grid rows (and, when packing a
+                         search front, the per-allocation objective rows the
+                         serving router tiers on), payload digest and byte
+                         accounting — everything a server needs; no
                          calibration state required at load time
 
 Round-trip contract (asserted in tests/test_packed_banks.py): a reloaded
@@ -20,14 +22,23 @@ artifact is leaf-for-leaf bit-identical to freshly built packed banks, and
 serving ``forward_population`` from it reproduces the search-time error
 counts exactly.
 
+The READ side of the format (``load_deployment`` / ``serving_params`` /
+``qp_stack``) lives in ``repro.serving.artifact`` — the serving tier owns
+it — and is re-exported here unchanged for existing callers.
+
 CLI (offline, writes one artifact):
 
     PYTHONPATH=src python tools/convert_checkpoint.py --out DIR \
-        [--steps 40] [--bits 2,4,8,16]
+        [--steps 40] [--bits 2,4,8,16] [--front-from CHECKPOINT_DIR]
 
 trains the small search model and packs one uniform allocation per value of
-``--bits`` (stand-ins for Pareto-front picks; library callers pass real
-front allocations to ``pack_deployment``).
+``--bits`` (stand-ins for Pareto-front picks). With ``--front-from``, the
+allocations come from a real finished search instead: the newest loadable
+``SearchStore`` checkpoint under CHECKPOINT_DIR whose target fingerprint
+matches the trained model supplies its Pareto front (and objective rows)
+directly — the artifact then serves exactly what the search found. The
+model must be retrained identically (same ``--steps``) for the fingerprint
+to match; a mismatch is an error, never a silently wrong artifact.
 """
 from __future__ import annotations
 
@@ -36,28 +47,21 @@ import dataclasses
 import io
 import json
 import os
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import durable_io
 from repro.core import quantization as Q
+from repro.serving.artifact import (ARTIFACT_VERSION, MANIFEST_NAME,
+                                    PAYLOAD_NAME, _nest, load_deployment,
+                                    qp_stack, serving_params)
 
-ARTIFACT_VERSION = 1
-PAYLOAD_NAME = "packed_banks.bin"
-MANIFEST_NAME = "manifest.json"
+__all__ = ["ARTIFACT_VERSION", "MANIFEST_NAME", "PAYLOAD_NAME",
+           "front_from_store", "load_deployment", "pack_deployment",
+           "qp_stack", "serving_params"]
 
-
-def _nest(flat: Dict[str, np.ndarray]) -> dict:
-    """Inverse of durable_io.flatten_tree for plain nested dicts."""
-    tree: dict = {}
-    for key, leaf in flat.items():
-        node = tree
-        parts = key.split(durable_io.SEP)
-        for p in parts[:-1]:
-            node = node.setdefault(p, {})
-        node[parts[-1]] = leaf
-    return tree
+_ = _nest  # re-exported for back-compat (tests poke the private helper)
 
 
 def _bank_weight_bytes(trained, banks) -> int:
@@ -72,11 +76,18 @@ def _bank_weight_bytes(trained, banks) -> int:
 
 
 def pack_deployment(trained, allocs: Sequence[Dict[str, tuple]],
-                    out_dir: str) -> dict:
+                    out_dir: str,
+                    objectives: Optional[Sequence[dict]] = None) -> dict:
     """Write the packed artifact for ``trained`` under ``out_dir`` and
     return the manifest. ``allocs``: the chosen per-layer (w_bits, a_bits)
     allocations (e.g. Pareto-front picks); their quantization-grid rows are
-    frozen into the manifest so serving needs no calibration state."""
+    frozen into the manifest so serving needs no calibration state.
+    ``objectives`` (optional, same length as ``allocs``): per-allocation
+    search objective rows (``error``, ``speedup``, ...) for the serving
+    router's SLO tiers."""
+    if objectives is not None and len(objectives) != len(allocs):
+        raise ValueError(f"{len(objectives)} objective rows for "
+                         f"{len(allocs)} allocations")
     os.makedirs(out_dir, exist_ok=True)
     banks = trained.make_packed_banks(trained.params)
     extras = {"FC": {"b": trained.params["FC"]["b"]}}
@@ -109,45 +120,93 @@ def pack_deployment(trained, allocs: Sequence[Dict[str, tuple]],
                   "f32_weight_banks": f32_b,
                   "ratio": f32_b / packed_b},
     }
+    if objectives is not None:
+        manifest["objectives"] = [
+            {k: float(v) for k, v in row.items()} for row in objectives]
     durable_io.atomic_write_bytes(
         os.path.join(out_dir, MANIFEST_NAME),
         json.dumps(manifest, indent=1).encode())
     return manifest
 
 
-def load_deployment(out_dir: str):
-    """Read back (manifest, banks, extras); raises
-    ``durable_io.CorruptFileError`` on a torn/corrupt payload and
-    ``ValueError`` when the payload does not match the manifest digest."""
-    with open(os.path.join(out_dir, MANIFEST_NAME), "rb") as f:
-        manifest = json.loads(f.read().decode())
-    payload = durable_io.read_checksummed(os.path.join(out_dir,
-                                                       manifest["payload"]))
-    with np.load(io.BytesIO(payload)) as z:
-        tree = _nest({k: z[k] for k in z.files})
-    digest = durable_io.tree_digest(tree)
-    if digest != manifest["tree_digest"]:
-        raise ValueError(f"{out_dir}: payload digest {digest} does not "
-                         f"match manifest {manifest['tree_digest']}")
-    return manifest, tree["banks"], tree["extras"]
+def front_from_store(root: str, trained) -> Tuple[List[dict], List[dict]]:
+    """Pull the Pareto front out of a ``SearchStore`` for ``trained``.
 
+    Scans ``root`` for search identities whose target fingerprint matches
+    ``trained`` (same layer names, menu AND parameter tree — a checkpoint
+    of a differently-trained model can never be packed against the wrong
+    weights), loads the newest loadable checkpoint among them, decodes the
+    stored front genomes into per-layer allocations and maps each front
+    individual's objective vector back to named values (the search stores
+    ``speedup`` negated for NSGA-II minimization; it comes back positive
+    here). Returns (allocs, objective_rows), both sorted by error.
+    """
+    from repro.core import checkpointing as ckpt
 
-def serving_params(manifest: dict, extras: dict) -> dict:
-    """Minimal parameter skeleton for ``forward_population(banks=...)``:
-    the banked lanes read weights from the banks, so the artifact only
-    carries the FC bias — everything else is structural."""
-    params: dict = {}
-    for name in manifest["layer_names"]:
-        params[name] = ({"fwd": {}, "bwd": {}} if name.startswith("L")
-                        else {})
-    params["FC"] = {"b": extras["FC"]["b"]}
-    return params
+    fp = ckpt.target_fingerprint(trained)
+    store = ckpt.SearchStore(root)
+    names = list(trained.layer_names)
+    best = None            # (newest gen file mtime, state, settings)
+    for key_hash in (sorted(os.listdir(root)) if os.path.isdir(root)
+                     else []):
+        key_file = os.path.join(root, key_hash, "KEY.json")
+        if not os.path.isfile(key_file):
+            continue
+        with open(key_file, "rb") as f:
+            key = json.loads(f.read().decode())
+        if key.get("fingerprint") != fp:
+            continue
+        for sh in sorted(os.listdir(os.path.join(root, key_hash))):
+            sfile = os.path.join(root, key_hash, sh, "SETTINGS.json")
+            if not os.path.isfile(sfile):
+                continue
+            with open(sfile, "rb") as f:
+                settings = json.loads(f.read().decode())
+            state = store.load_latest(
+                key, settings,
+                params_template=getattr(trained, "params", None))
+            if state is None:
+                continue
+            gens = store.generations(key, settings)
+            path = os.path.join(store.dir_for(key, settings),
+                                store._FMT.format(gens[-1]))
+            mtime = os.path.getmtime(path)
+            if best is None or mtime > best[0]:
+                best = (mtime, state, settings)
+    if best is None:
+        raise FileNotFoundError(
+            f"no loadable checkpoint under {root!r} matches the trained "
+            f"model (fingerprint {fp[:12]})")
+    _, state, settings = best
 
+    L = len(names)
 
-def qp_stack(manifest: dict) -> np.ndarray:
-    """(P, L, 6) float32 qp grid stack of the packed allocations — ready
-    for ``forward_population`` (one lane per packed allocation)."""
-    return np.asarray(manifest["qp"], np.float32)
+    def decode(genome) -> dict:
+        g = [int(v) for v in np.asarray(genome).tolist()]
+        from repro.core.mohaq import BITS_OF_CODE
+        if len(g) == L:                              # tied: w bits == a bits
+            return {n: (BITS_OF_CODE[g[i]], BITS_OF_CODE[g[i]])
+                    for i, n in enumerate(names)}
+        if len(g) == 2 * L:
+            return {n: (BITS_OF_CODE[g[2 * i]], BITS_OF_CODE[g[2 * i + 1]])
+                    for i, n in enumerate(names)}
+        raise ValueError(f"genome length {len(g)} fits neither tied ({L}) "
+                         f"nor untied ({2 * L}) encoding for {L} layers")
+
+    obj_names = list(settings.get("objectives", []))
+    front = [state.population[i] for i in state.front_idx]
+    seen, picks = set(), []
+    for ind in sorted(front, key=lambda i: float(i.objectives[0])):
+        alloc = decode(ind.genome)
+        akey = tuple(sorted((n, alloc[n]) for n in alloc))
+        if akey in seen:
+            continue
+        seen.add(akey)
+        row = {}
+        for name, v in zip(obj_names, ind.objectives):
+            row[name] = float(-v) if name == "speedup" else float(v)
+        picks.append((alloc, row))
+    return [a for a, _ in picks], [r for _, r in picks]
 
 
 def main(argv: List[str] | None = None) -> int:
@@ -157,21 +216,34 @@ def main(argv: List[str] | None = None) -> int:
                     help="training steps for the demo model")
     ap.add_argument("--bits", default="2,4,8,16",
                     help="comma list: one uniform (b, 8)-allocation each")
+    ap.add_argument("--front-from", default=None, metavar="CHECKPOINT_DIR",
+                    help="pack the Pareto front of the newest matching "
+                         "SearchStore checkpoint instead of --bits")
     args = ap.parse_args(argv)
 
     from repro.core import sru_experiment as X
     trained = X.train_small_sru(steps=args.steps)
-    menu = tuple(trained.menu)
-    allocs = []
-    for b in (int(s) for s in args.bits.split(",")):
-        if b not in menu:
-            raise SystemExit(f"--bits {b} not in menu {menu}")
-        allocs.append({n: (b, 8) for n in trained.layer_names})
-    manifest = pack_deployment(trained, allocs, args.out)
+    objectives = None
+    if args.front_from is not None:
+        allocs, objectives = front_from_store(args.front_from, trained)
+        if not allocs:
+            raise SystemExit(f"checkpoint under {args.front_from} has an "
+                             f"empty front")
+    else:
+        menu = tuple(trained.menu)
+        allocs = []
+        for b in (int(s) for s in args.bits.split(",")):
+            if b not in menu:
+                raise SystemExit(f"--bits {b} not in menu {menu}")
+            allocs.append({n: (b, 8) for n in trained.layer_names})
+    manifest = pack_deployment(trained, allocs, args.out,
+                               objectives=objectives)
     _m, banks, _x = load_deployment(args.out)   # verify round trip
     del banks
     by = manifest["bytes"]
-    print(f"wrote {args.out}: {len(allocs)} allocation(s), "
+    src = (f"front of {args.front_from}" if args.front_from is not None
+           else f"uniform bits {args.bits}")
+    print(f"wrote {args.out}: {len(allocs)} allocation(s) from {src}, "
           f"packed weight banks {by['packed_weight_banks']} B "
           f"({by['ratio']:.2f}x smaller than f32 banks), "
           f"digest {manifest['tree_digest'][:12]}")
