@@ -438,8 +438,15 @@ def sru_contract_harness():
         return sru.forward_population(params, cfg, feats, qp_stack,
                                       fused=True, banks=banks)
 
+    def forward_decode(params, feats_lane, qp_stack, banks=None):
+        # the serving hot path: feats_lane (P, T, m), one request chunk per
+        # population lane — C5 proves no op mixes the lanes
+        return sru.forward_decode_step(params, cfg, feats_lane, qp_stack,
+                                       banks=banks)
+
     return ContractHarness(
         name="sru", target=trained, feats=feats, labels=labels,
         layer_names=tuple(names), marker_dim=T,
         anchor_path="src/repro/models/sru.py", forward_pop=forward_pop,
-        make_evaluator=lambda: trained.batched_evaluator(use_banks=True))
+        make_evaluator=lambda: trained.batched_evaluator(use_banks=True),
+        forward_decode=forward_decode)

@@ -3,7 +3,9 @@
 The jaxpr contract checker (``tools/analysis/contracts.py``) verifies IR-
 level invariants of the search hot path — banked forwards never re-quantize
 weights, no f64 creeps into an eval jaxpr, the per-generation evaluator is
-one donated dispatch. Those checks need a *tiny but real* instance of each
+one donated dispatch, and every op of the banked forward (and the serving
+decode step) is lane-independent along the population axis (C5, the jaxpr
+dataflow prover). Those checks need a *tiny but real* instance of each
 target: real params, real quant tables, shapes small enough that tracing is
 instant. A ``ContractHarness`` packages exactly that, and this registry
 maps architecture names to lazy harness builders so a future target (Mamba,
@@ -21,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Callable, Dict, List, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 MARKER_DIM = 3
 
@@ -43,6 +45,12 @@ class ContractHarness:
     # () -> a banked PopulationEvaluator for the dispatch/donation checks
     make_evaluator: Callable[[], Any]
     supports_requant: bool = True
+    # forward_decode(params, feats_lane, qp_stack, banks) -> (P, T, out)
+    # serving decode step, feats_lane (P, T, ...) one chunk PER LANE — the
+    # population-axis-as-request-axis dispatch the C5 lane-independence
+    # prover must also certify. None = architecture has no serving tier
+    # yet (it still gets C5 on forward_pop).
+    forward_decode: Optional[Callable[..., Any]] = None
 
 
 _BUILTIN: Dict[str, str] = {

@@ -474,4 +474,8 @@ def xlstm_contract_harness():
         layer_names=names, marker_dim=T,
         anchor_path="src/repro/core/xlstm_target.py",
         forward_pop=forward_pop,
-        make_evaluator=lambda: target.batched_evaluator(use_banks=True))
+        make_evaluator=lambda: target.batched_evaluator(use_banks=True),
+        # no serving decode step yet: C5 still proves lane independence of
+        # the banked forward_population; forward_decode joins when the
+        # serving tier grows an xLSTM lane
+        forward_decode=None)

@@ -99,6 +99,18 @@ class ServingEngine:
                          use_kernel=self.use_kernel)
         return np.asarray(jax.block_until_ready(out))
 
+    def step_jaxpr(self, lanes: int, chunk: int):
+        """Closed jaxpr of one serving step at a (lanes, chunk) bucket —
+        the exact computation ``step`` dispatches, traced without running.
+        This is what the C5 lane-independence prover consumes to certify
+        that pad lanes and neighbors cannot perturb a live lane's logits
+        (tests/test_serving.py proves it on a real loaded engine; the
+        contract layer proves the same property on the registry harness)."""
+        feats = jnp.zeros((lanes, chunk, self.cfg.input_dim), jnp.float32)
+        qp = jnp.asarray(np.stack([self.artifact.qp[0]] * lanes))
+        return jax.make_jaxpr(
+            lambda f, q: self._step_impl(f, q, self.use_kernel))(feats, qp)
+
 
 def bucket_for(n: int, buckets: List[int]) -> int:
     for b in buckets:

@@ -2,10 +2,15 @@
 
 Layer 1: per-rule positive + negative fixtures through ``analyze_source``
 (the fixture's fake path opts it into path-scoped rules). Layer 2: the
-jaxpr contract checker against the real SRU harness, plus a deliberately
-re-quantizing "banked" forward that C1 must reject. Baseline: round-trip
-(finding -> write baseline -> gate clean) and the justification
-requirement.
+jaxpr contract checker against the real SRU harness, plus deliberately
+broken forwards each contract must reject (requantizing banked lane for
+C1, lane-flipping and cross-lane-normalizing lanes for C5). Baseline:
+round-trip (finding -> write baseline -> gate clean), the justification
+requirement, and ``--changed-only`` stale-scoping. CLI: the ``--json``
+object shape (findings/kernels/timings with ``layer`` tags) and the
+``--max-seconds`` budget. The dataflow engine behind C5 has its own
+suite in test_dataflow.py; the Pallas kernel verifier (K-rules) in
+test_kernel_rules.py.
 """
 import json
 import textwrap
@@ -211,6 +216,59 @@ def test_r4_clean_hashable_statics():
     assert out == []
 
 
+def test_r4_flags_float_static_via_argnums():
+    """static_argnums is the positional spelling of the same contract —
+    a float-defaulted static arg recompiles per value either way."""
+    out = _analyze("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnums=(1,))
+        def f(x, scale=0.5):
+            return x * scale
+    """, path=PLAIN_PATH)
+    assert _rules(out) == ["R4"]
+    assert "float-valued static" in out[0].message
+    assert "`scale`" in out[0].message
+
+
+def test_r4_flags_mutable_static_via_scalar_argnums():
+    out = _analyze("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnums=2)
+        def f(x, n, opts={}):
+            return x
+    """, path=PLAIN_PATH)
+    msgs = " | ".join(f.message for f in out)
+    assert "unhashable default for static arg `opts`" in msgs
+
+
+def test_r4_flags_out_of_range_argnums():
+    out = _analyze("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnums=(5,))
+        def f(x, n):
+            return x
+    """, path=PLAIN_PATH)
+    assert _rules(out) == ["R4"]
+    assert "out of range" in out[0].message
+
+
+def test_r4_argnums_clean_and_vararg_tolerant():
+    out = _analyze("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnums=(1,))
+        def f(x, n=4):
+            return x * n
+        @functools.partial(jax.jit, static_argnums=(3,))
+        def g(x, *rest):
+            return x
+    """, path=PLAIN_PATH)
+    assert out == []
+
+
 # --------------------------------------------------------------- R5
 
 def test_r5_flags_f64_in_parity_frozen_module():
@@ -311,6 +369,61 @@ def test_r6_scope_and_pragma():
                 return 0
     """)
     assert allowed == []
+
+
+# ------------------------------------------------- pragmas and layers
+
+def test_pragma_suppresses_multiple_rules():
+    """One pragma may allowlist several rules: `allow=R4,R3 reason` (with
+    or without spaces after the comma)."""
+    out = _analyze("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("scale",))
+        def f(x, scale=0.5):  # analyze: allow=R4, R3 float static test knob
+            jax.debug.print("x={}", x)
+            return x * scale
+    """, path=PLAIN_PATH)
+    # the R4 (float static, anchored to the def line) AND the R3 on the
+    # directly-following jax.debug line are both suppressed by one pragma
+    assert out == []
+
+
+def test_pragma_unknown_rule_id_is_hard_error():
+    out = _analyze("""
+        import jax
+        @jax.jit
+        def f(x):
+            jax.debug.print("x={}", x)  # analyze: allow=R3,R99 typo'd id
+            return x
+    """, path=PLAIN_PATH)
+    # R3 (a known id) still suppresses; the unknown id is an E1 finding
+    assert _rules(out) == ["E1"]
+    assert "R99" in out[0].message and "known ids" in out[0].message
+
+
+def test_pragma_star_cannot_hide_its_own_typo():
+    out = _analyze("""
+        x = 1  # analyze: allow=*,BOGUS belt and suspenders
+    """, path=PLAIN_PATH)
+    assert _rules(out) == ["E1"]
+    assert "BOGUS" in out[0].message
+
+
+def test_all_emittable_rule_ids_are_known():
+    from tools.analysis.core import KNOWN_RULES
+    from tools.analysis.rules import ALL_RULES
+    assert {r.id for r in ALL_RULES} <= KNOWN_RULES
+    assert {"C5", "K0", "K1", "K2", "K3", "K4", "E0", "E1"} <= KNOWN_RULES
+
+
+def test_finding_layer_field():
+    from tools.analysis.core import Finding
+    assert Finding("R1", "a.py", 1, "m").layer == "ast"
+    assert Finding("E1", "a.py", 1, "m").layer == "ast"
+    assert Finding("C5", "a.py", 1, "m").layer == "contract"
+    assert Finding("K2", "a.py", 1, "m").layer == "kernel"
+    assert Finding("C5", "a.py", 1, "m").to_json()["layer"] == "contract"
 
 
 # --------------------------------------------------------- baseline
@@ -429,6 +542,58 @@ def test_contracts_fail_on_f32_leak_in_packed_lane(sru_harness):
     assert all(f.path == h.anchor_path for f in findings)
 
 
+def test_c5_fails_on_lane_mixing_forward(sru_harness):
+    """A forward that mixes population lanes — here: flipping the lane
+    axis of an otherwise-correct banked forward — must trip the C5
+    lane-independence prover with the exact mixing primitive named."""
+    import dataclasses
+
+    import jax
+
+    from repro.models import sru
+    from tools.analysis.contracts import check_harness
+
+    h = sru_harness
+    cfg = h.target.cfg
+
+    def lane_flipping_forward(params, feats, qp_stack, banks=None):
+        out = sru.forward_population(params, cfg, feats, qp_stack,
+                                     fused=True, banks=banks)
+        return jax.tree_util.tree_map(lambda t: t[::-1], out)
+
+    bad = dataclasses.replace(h, forward_pop=lane_flipping_forward,
+                              forward_decode=None)
+    findings = check_harness(bad)
+    c5 = [f for f in findings if f.rule == "C5"]
+    assert c5, [f.format() for f in findings]
+    assert any("rev" in f.message and "not lane-independent" in f.message
+               for f in c5)
+    assert all(f.path == h.anchor_path for f in findings)
+
+
+def test_c5_fails_on_cross_lane_normalization(sru_harness):
+    """Subtler mixing than a flip: normalizing logits by a cross-lane
+    mean. Every op is shape-preserving, so only dataflow can catch it."""
+    import dataclasses
+
+    from repro.models import sru
+    from tools.analysis.contracts import check_harness
+
+    h = sru_harness
+    cfg = h.target.cfg
+
+    def mean_mixing_forward(params, feats, qp_stack, banks=None):
+        out = sru.forward_population(params, cfg, feats, qp_stack,
+                                     fused=True, banks=banks)
+        return out - out.mean(axis=0, keepdims=True)
+
+    bad = dataclasses.replace(h, forward_pop=mean_mixing_forward,
+                              forward_decode=None)
+    c5 = [f for f in check_harness(bad) if f.rule == "C5"]
+    assert any("reduce" in f.message for f in c5), \
+        [f.format() for f in c5]
+
+
 def test_contract_registry_lists_both_targets():
     from repro.core import target_registry as tr
     assert {"sru", "xlstm"} <= set(tr.list_contract_targets())
@@ -451,6 +616,89 @@ def test_contract_registry_custom_target(sru_harness):
         assert run_contracts(["custom"]) == []
     finally:
         tr._CUSTOM.pop("custom", None)
+
+
+# --------------------------------------------- CLI: json / changed-only
+
+def test_apply_baseline_restrict_paths_limits_stale():
+    base = {("R1", "src/a.py", 3): "why", ("R1", "src/b.py", 7): "why"}
+    new, grand, stale = bl.apply_baseline([], base,
+                                          restrict_paths={"src/a.py"})
+    assert new == [] and grand == []
+    assert stale == [("R1", "src/a.py", 3)]     # b.py was out of scope
+    _, _, stale_full = bl.apply_baseline([], base)
+    assert len(stale_full) == 2
+
+
+def test_cli_json_object_shape(tmp_path, capsys):
+    from tools.analysis.__main__ import main
+    mod = tmp_path / "fixture.py"
+    mod.write_text("import numpy as np\nx = np.random.rand(3)\n")
+    # out of R1 scope by path, so findings may be empty — the shape is
+    # what's under test; force one finding with an unknown-pragma E1
+    mod.write_text("x = 1  # analyze: allow=ZZZ nope\n")
+    rc = main([str(mod), "--json", "--no-contracts", "--no-kernels",
+               "--baseline", str(tmp_path / "none.json")])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert set(out) == {"findings", "kernels", "timings"}
+    assert out["findings"] and out["findings"][0]["rule"] == "E1"
+    assert out["findings"][0]["layer"] == "ast"
+    assert "ast" in out["timings"] and "total" in out["timings"]
+    assert out["kernels"] == []                  # --no-kernels
+
+
+def test_cli_max_seconds_budget(tmp_path, capsys):
+    from tools.analysis.__main__ import main
+    mod = tmp_path / "clean.py"
+    mod.write_text("x = 1\n")
+    base = str(tmp_path / "none.json")
+    assert main([str(mod), "--no-contracts", "--no-kernels",
+                 "--baseline", base, "--max-seconds", "60"]) == 0
+    assert main([str(mod), "--no-contracts", "--no-kernels",
+                 "--baseline", base, "--max-seconds", "0"]) == 1
+    assert "over the --max-seconds" in capsys.readouterr().err
+
+
+def test_changed_only_scopes_to_git_diff(tmp_path, monkeypatch, capsys):
+    """--changed-only lints only files changed vs the base ref (plus
+    untracked), skips contracts/kernels, and does not report baseline
+    entries outside the diff as stale."""
+    import subprocess
+
+    from tools.analysis.__main__ import main
+
+    repo = tmp_path
+    core = repo / "src" / "repro" / "core"
+    core.mkdir(parents=True)
+    git = ["git", "-c", "user.name=t", "-c", "user.email=t@t"]
+    subprocess.run(git + ["init", "-q"], cwd=repo, check=True)
+    # two committed files, both with R1 violations
+    (core / "old.py").write_text("import numpy as np\na = np.random.rand(1)\n")
+    (core / "hot.py").write_text("import numpy as np\nb = np.random.rand(1)\n")
+    subprocess.run(git + ["add", "."], cwd=repo, check=True)
+    subprocess.run(git + ["commit", "-qm", "seed"], cwd=repo, check=True)
+    # only hot.py changes after the commit
+    (core / "hot.py").write_text(
+        "import numpy as np\nb = np.random.rand(1)\nc = np.random.rand(2)\n")
+    monkeypatch.chdir(repo)
+    # baseline grandfathers old.py's finding; it is outside the diff, so
+    # a changed-only run must NOT call it stale
+    baseline = repo / "baseline.json"
+    baseline.write_text(json.dumps({"version": 1, "findings": [
+        {"rule": "R1", "path": "src/repro/core/old.py", "line": 2,
+         "justification": "legacy"}]}))
+    rc = main(["src", "--changed-only", "--base-ref", "HEAD",
+               "--baseline", str(baseline)])
+    captured = capsys.readouterr()
+    assert rc == 1                               # hot.py has new findings
+    assert "hot.py" in captured.out and "old.py" not in captured.out
+    assert "stale" not in captured.err
+    # full run from the same tree DOES see old.py (and its baseline hit)
+    rc_full = main(["src", "--no-contracts", "--no-kernels",
+                    "--baseline", str(baseline)])
+    assert rc_full == 1
+    assert "old.py" in capsys.readouterr().out
 
 
 # --------------------------------------------------------- repo gate

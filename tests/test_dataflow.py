@@ -1,0 +1,201 @@
+"""Tests for the jaxpr dataflow engine behind C5 (tools/analysis/dataflow).
+
+Synthetic jaxprs with known taint behavior: elementwise chains and batched
+dot_generals must carry the population axis through untouched; scan bodies
+must propagate carry taint to a fixpoint; and deliberate cross-lane ops
+(transpose onto a contracted dim, rev, mean-reduce) must each produce a
+violation naming the exact primitive with a source line. The engine fails
+closed: an unknown primitive touching the population axis is a violation,
+not a pass.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tools.analysis import dataflow as df
+
+P = 4   # population size used throughout
+
+
+def _prove(fn, *args, in_axes):
+    jx = jax.make_jaxpr(fn)(*args)
+    return df.prove_lane_independence(jx, in_axes)
+
+
+def _x(*shape):
+    return jnp.asarray(np.arange(np.prod(shape), dtype=np.float32)
+                       .reshape(shape))
+
+
+# ---------------------------------------------------------------- clean
+
+def test_elementwise_chain_preserves_lane_axis():
+    def fn(x):
+        return jnp.tanh(jax.nn.sigmoid(x * 2.0) + jnp.exp(-x))
+
+    rep = _prove(fn, _x(P, 3), in_axes=[0])
+    assert rep.ok and rep.out_axes == [0]
+
+
+def test_broadcast_and_shared_operand_stay_clean():
+    def fn(x, w):
+        return x * w[None, :] + jnp.float32(1.0)
+
+    rep = _prove(fn, _x(P, 5), _x(5), in_axes=[0, None])
+    assert rep.ok and rep.out_axes == [0]
+
+
+def test_dot_general_batch_dim_carries_lane_axis():
+    def fn(x, w):
+        # vmapped matmul: pop axis becomes a dot_general batch dim
+        return jax.vmap(lambda a: a @ w)(x)
+
+    rep = _prove(fn, _x(P, 3, 5), _x(5, 2), in_axes=[0, None])
+    assert rep.ok and rep.out_axes == [0]
+
+
+def test_free_dim_matmul_keeps_lane_axis():
+    def fn(x, w):
+        return x @ w     # (P, 5) @ (5, 2): pop axis is the free M dim
+
+    rep = _prove(fn, _x(P, 5), _x(5, 2), in_axes=[0, None])
+    assert rep.ok and rep.out_axes == [0]
+
+
+def test_scan_body_propagates_carry_taint():
+    def fn(x):
+        def body(c, t):
+            return c * 0.5 + t, c.sum()   # ys reduce is lane-shared-safe?
+
+        # xs iterate over TIME (axis moved to front), pop stays axis 1
+        c, ys = jax.lax.scan(body, jnp.zeros((P, 3)),
+                             jnp.moveaxis(x, 1, 0))
+        return c
+
+    rep = _prove(fn, _x(P, 6, 3), in_axes=[0])
+    # the carry keeps the pop axis; the ys branch SUMS over it, which the
+    # engine must flag — the carry output alone is not proof enough
+    assert not rep.ok
+    assert any("reduce" in v.primitive for v in rep.violations)
+
+
+def test_scan_over_time_only_is_clean():
+    def fn(x):
+        def body(c, t):
+            return c * 0.5 + t, c * 2.0
+
+        c, ys = jax.lax.scan(body, jnp.zeros((P, 3)), jnp.moveaxis(x, 1, 0))
+        return c, jnp.moveaxis(ys, 0, 1)
+
+    rep = _prove(fn, _x(P, 6, 3), in_axes=[0])
+    assert rep.ok and rep.out_axes == [0, 0]
+
+
+def test_transpose_tracks_axis_position():
+    def fn(x):
+        return jnp.transpose(x, (1, 0, 2))
+
+    rep = _prove(fn, _x(P, 3, 2), in_axes=[0])
+    assert rep.ok and rep.out_axes == [1]
+
+
+def test_concatenate_along_other_axis_is_clean():
+    def fn(x, y):
+        return jnp.concatenate([x, y], axis=1)
+
+    rep = _prove(fn, _x(P, 3), _x(P, 2), in_axes=[0, 0])
+    assert rep.ok and rep.out_axes == [0]
+
+
+# ------------------------------------------------------------ violations
+
+def test_reduce_over_lane_axis_fails_with_source_line():
+    def mixes_lanes(x):
+        return x - x.mean(axis=0)     # cross-lane mean
+
+    jx = jax.make_jaxpr(mixes_lanes)(_x(P, 3))
+    rep = df.prove_lane_independence(jx, [0])
+    assert not rep.ok
+    v = next(v for v in rep.violations if "reduce" in v.primitive)
+    assert "population axis" in v.reason
+    # exact source attribution: this very file, inside mixes_lanes
+    assert "test_dataflow.py" in (v.source or "")
+    assert "mixes_lanes" in (v.source or "")
+
+
+def test_rev_of_lane_axis_fails():
+    rep = _prove(lambda x: x[::-1], _x(P, 3), in_axes=[0])
+    assert not rep.ok
+    assert any(v.primitive == "rev" for v in rep.violations)
+
+
+def test_transpose_into_contraction_fails():
+    def fn(x):
+        return x.T @ x     # (3, P) @ (P, 3): contracts the pop axis
+
+    rep = _prove(fn, _x(P, 3), in_axes=[0])
+    assert not rep.ok
+    assert any(v.primitive == "dot_general" and "contract" in v.reason
+               for v in rep.violations)
+
+
+def test_lane_permuting_gather_fails():
+    def fn(x):
+        return x[jnp.array([1, 0, 3, 2])]
+
+    rep = _prove(fn, _x(P, 3), in_axes=[0])
+    assert not rep.ok
+
+
+def test_scan_consuming_lane_axis_as_time_fails():
+    def fn(x):
+        def body(c, lane):
+            return c + lane, None
+
+        c, _ = jax.lax.scan(body, jnp.zeros((3,)), x)   # xs axis 0 = pop!
+        return c
+
+    rep = _prove(fn, _x(P, 3), in_axes=[0])
+    assert not rep.ok
+    assert any(v.primitive == "scan" for v in rep.violations)
+
+
+def test_untainted_outputs_are_a_violation_by_default():
+    def fn(x):
+        return jnp.zeros((P, 3))      # ignores its lane input entirely
+
+    rep = _prove(fn, _x(P, 3), in_axes=[0])
+    assert not rep.ok
+    assert any(v.primitive == "<output>" for v in rep.violations)
+    relaxed = df.prove_lane_independence(
+        jax.make_jaxpr(fn)(_x(P, 3)), [0], require_tainted_outputs=False)
+    assert relaxed.ok
+
+
+def test_violation_format_names_site():
+    rep = _prove(lambda x: x.sum(), _x(P,), in_axes=[0])
+    assert not rep.ok
+    text = rep.violations[0].format()
+    assert "reduce" in text and "population axis" in text
+
+
+# ------------------------------------------------------------- pytrees
+
+def test_trace_and_prove_expands_axes_over_pytrees():
+    def fn(tree, shared):
+        return {"a": tree["a"] * 2.0, "b": tree["b"] + shared}
+
+    rep = df.trace_and_prove(
+        fn, {"a": _x(P, 2), "b": _x(P, 3)}, _x(3), in_axes=[0, None])
+    assert rep.ok and rep.out_axes == [0, 0]
+
+
+def test_trace_and_prove_catches_cross_lane_in_branch():
+    def fn(tree):
+        return {"a": tree["a"], "b": jnp.flip(tree["b"], axis=0)}
+
+    rep = df.trace_and_prove(fn, {"a": _x(P, 2), "b": _x(P, 3)},
+                             in_axes=[0])
+    assert not rep.ok
+    assert any(v.primitive == "rev" for v in rep.violations)

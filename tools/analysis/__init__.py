@@ -1,9 +1,21 @@
 """repro-analyze: the static-analysis gate over the search hot path.
 
-Layer 1 (AST invariant lint, rules R1-R5) + Layer 2 (jaxpr contract
-checks C1-C4) with a committed-baseline workflow. Run as
-``python -m tools.analysis [paths...]``; see ``tools/check.sh`` (stage
-``analyze``) and the ROADMAP "Static-analysis gate" section.
+Three layers with a committed-baseline workflow:
+
+- Layer 1 (``ast``): AST invariant lint, rules R1-R6, plus the E gate-
+  integrity errors (E0 syntax, E1 unknown rule id in a pragma).
+- Layer 2 (``contract``): jaxpr contract checks C1-C5 traced per
+  registered SearchTarget; C5 is the population-lane independence proof
+  powered by the per-primitive axis-transfer engine in ``dataflow.py``.
+- Layer 3 (``kernel``): the Pallas kernel verifier K0-K4 in
+  ``kernel_rules.py`` — grid/BlockSpec divisibility, index_map bounds for
+  the scalar-prefetched bank-row gather, VMEM working set, and packed-
+  container layout agreement, all without executing a kernel body.
+
+Run as ``python -m tools.analysis [paths...]`` (``--changed-only`` for the
+fast pre-commit lane, ``--json`` for machine-readable output with per-
+finding ``layer`` tags); see ``tools/check.sh`` (stage ``analyze``) and
+the ROADMAP "Static-analysis gate" section.
 """
 from tools.analysis.baseline import (BaselineError, apply_baseline,
                                      load_baseline, write_baseline)

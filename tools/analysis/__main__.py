@@ -1,14 +1,35 @@
 """CLI of the static-analysis gate: ``python -m tools.analysis``.
 
+Three layers, each timed separately (the timing block prints on every
+non-JSON run and ``check.sh analyze`` enforces a total wall-clock budget
+via ``--max-seconds``):
+
+- ``ast``       Layer 1: AST invariant lint (R1-R6) over the given paths
+- ``contract``  Layer 2: jaxpr contract checks (C1-C5) on registered targets
+- ``kernel``    Layer 3: Pallas kernel verifier (K0-K4) over kernels/
+
+``--changed-only`` is the fast pre-commit lane: Layer 1 restricted to
+files changed vs ``--base-ref`` (``git diff --name-only`` plus untracked),
+Layers 2 and 3 skipped entirely — they verify whole-program properties
+that cannot be scoped to a diff. The full gate remains the CI entry point.
+
+``--json`` emits one object: ``{"findings": [...], "kernels": [...],
+"timings": {...}}`` — each finding carries a ``layer`` field, ``kernels``
+is the per-pallas_call-site report (grid, VMEM estimate), ``timings`` maps
+layer name to seconds.
+
 Exit codes: 0 = clean (or all findings baselined with justifications),
-1 = new findings / failed contracts, 2 = usage or baseline-file errors.
+1 = new findings / failed contracts / time budget exceeded,
+2 = usage or baseline-file errors.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
+import time
 
 from tools.analysis import baseline as bl
 from tools.analysis.core import analyze_paths
@@ -16,15 +37,34 @@ from tools.analysis.core import analyze_paths
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 
 
+def _changed_files(base_ref: str):
+    """Python files changed vs base_ref (committed + staged + worktree)
+    plus untracked ones — the pre-commit iteration set. Returns None on
+    git failure (caller falls back to the full path set with a warning)."""
+    try:
+        diff = subprocess.run(
+            ["git", "diff", "--name-only", base_ref, "--"],
+            capture_output=True, text=True, check=True)
+        untracked = subprocess.run(
+            ["git", "ls-files", "--others", "--exclude-standard"],
+            capture_output=True, text=True, check=True)
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    files = set(diff.stdout.splitlines()) | set(untracked.stdout.splitlines())
+    return sorted(f for f in files if f.endswith(".py") and os.path.exists(f))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m tools.analysis",
-        description="repro-analyze: AST invariant lint (R1-R5) + jaxpr "
-                    "contract checks (C1-C4) over the search hot path.")
+        description="repro-analyze: AST invariant lint (R1-R6) + jaxpr "
+                    "contract checks (C1-C5) + Pallas kernel verifier "
+                    "(K0-K4) over the search hot path.")
     ap.add_argument("paths", nargs="*", default=None,
                     help="files/directories to lint (default: src)")
     ap.add_argument("--json", action="store_true", dest="as_json",
-                    help="emit findings as a JSON array on stdout")
+                    help="emit {findings, kernels, timings} as JSON on "
+                         "stdout (findings carry a `layer` field)")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help="baseline file grandfathering documented "
                          "exceptions (default: tools/analysis/baseline.json)")
@@ -36,22 +76,77 @@ def main(argv=None) -> int:
                     help="skip the jaxpr contract checks (Layer 2)")
     ap.add_argument("--contracts-only", action="store_true",
                     help="run only the jaxpr contract checks")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the Pallas kernel verifier (Layer 3)")
+    ap.add_argument("--kernels-only", action="store_true",
+                    help="run only the Pallas kernel verifier")
     ap.add_argument("--targets", nargs="*", default=None,
                     help="contract-check only these registered targets "
                          "(default: all)")
+    ap.add_argument("--vmem-budget-mb", type=float, default=16.0,
+                    help="per-core VMEM budget for the K3 working-set "
+                         "check (default: 16)")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="fast pre-commit lane: lint only files changed vs "
+                         "--base-ref; skips contract + kernel layers")
+    ap.add_argument("--base-ref", default="HEAD",
+                    help="git ref --changed-only diffs against "
+                         "(default: HEAD)")
+    ap.add_argument("--max-seconds", type=float, default=None,
+                    help="fail (exit 1) if the whole gate takes longer "
+                         "than this many seconds of wall clock")
     args = ap.parse_args(argv)
 
+    t_start = time.monotonic()
+    timings = {}
     findings = []
-    if not args.contracts_only:
+    kernel_report = []
+
+    run_ast = not (args.contracts_only or args.kernels_only)
+    run_contracts = not (args.no_contracts or args.kernels_only
+                         or args.changed_only)
+    run_kernels = not (args.no_kernels or args.contracts_only
+                       or args.changed_only)
+    if args.contracts_only and args.kernels_only:
+        print("error: --contracts-only and --kernels-only are mutually "
+              "exclusive", file=sys.stderr)
+        return 2
+
+    restrict_paths = None
+    if run_ast:
+        t0 = time.monotonic()
         paths = args.paths or ["src"]
+        if args.changed_only:
+            changed = _changed_files(args.base_ref)
+            if changed is None:
+                print("warning: git diff failed; --changed-only falling "
+                      "back to the full path set", file=sys.stderr)
+            else:
+                from tools.analysis.core import collect_files
+                scope = {os.path.normpath(f) for f in collect_files(paths)}
+                paths = [f for f in changed
+                         if os.path.normpath(f) in scope]
+                restrict_paths = {p.replace(os.sep, "/") for p in paths}
+                if not paths:
+                    print("changed-only: no changed python files in scope")
         missing = [p for p in paths if not os.path.exists(p)]
         if missing:
             print(f"error: no such path(s): {missing}", file=sys.stderr)
             return 2
         findings += analyze_paths(paths)
-    if not args.no_contracts:
-        from tools.analysis.contracts import run_contracts
-        findings += run_contracts(args.targets)
+        timings["ast"] = time.monotonic() - t0
+    if run_contracts:
+        t0 = time.monotonic()
+        from tools.analysis.contracts import run_contracts as rc
+        findings += rc(args.targets)
+        timings["contract"] = time.monotonic() - t0
+    if run_kernels:
+        t0 = time.monotonic()
+        from tools.analysis.kernel_rules import run_kernel_checks
+        kfindings, kernel_report = run_kernel_checks(
+            vmem_budget_mb=args.vmem_budget_mb)
+        findings += kfindings
+        timings["kernel"] = time.monotonic() - t0
 
     if args.write_baseline:
         prev = {}
@@ -68,11 +163,21 @@ def main(argv=None) -> int:
     except bl.BaselineError as e:
         print(f"baseline error: {e}", file=sys.stderr)
         return 2
-    new, grandfathered, stale = bl.apply_baseline(findings, base)
+    new, grandfathered, stale = bl.apply_baseline(
+        findings, base, restrict_paths=restrict_paths)
+
+    total = time.monotonic() - t_start
+    over_budget = args.max_seconds is not None and total > args.max_seconds
 
     if args.as_json:
-        print(json.dumps([dict(f.to_json(), baselined=(f in grandfathered))
-                          for f in findings], indent=2))
+        print(json.dumps({
+            "findings": [dict(f.to_json(),
+                              baselined=(f in grandfathered))
+                         for f in findings],
+            "kernels": kernel_report,
+            "timings": {**{k: round(v, 3) for k, v in timings.items()},
+                        "total": round(total, 3)},
+        }, indent=2))
     else:
         for f in new:
             print(f.format())
@@ -83,6 +188,8 @@ def main(argv=None) -> int:
             print(f"warning: stale baseline entry {path}:{line} {rule} "
                   "(no longer matches a finding — remove it)",
                   file=sys.stderr)
+        layer_times = "  ".join(f"{k}={v:.1f}s" for k, v in timings.items())
+        print(f"timings: {layer_times}  total={total:.1f}s")
         if new:
             print(f"\n{len(new)} new finding(s) — fix them or baseline "
                   f"with justification in {args.baseline}",
@@ -91,7 +198,12 @@ def main(argv=None) -> int:
             print(f"all {len(findings)} finding(s) baselined; gate clean")
         else:
             print("repro-analyze: no findings; gate clean")
-    return 1 if new else 0
+        if over_budget:
+            print(f"error: gate took {total:.1f}s, over the "
+                  f"--max-seconds {args.max_seconds:.0f}s budget — a slow "
+                  f"gate stops being run; profile the layer timings above",
+                  file=sys.stderr)
+    return 1 if (new or over_budget) else 0
 
 
 if __name__ == "__main__":

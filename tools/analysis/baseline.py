@@ -63,9 +63,14 @@ def load_baseline(path: str) -> Dict[Key, str]:
     return out
 
 
-def apply_baseline(findings: Sequence[Finding], baseline: Dict[Key, str]):
+def apply_baseline(findings: Sequence[Finding], baseline: Dict[Key, str],
+                   restrict_paths=None):
     """Split findings into (new, grandfathered) and report stale baseline
-    keys that matched nothing."""
+    keys that matched nothing. ``restrict_paths`` (a set of repo-relative
+    paths, or None for no restriction) limits STALE reporting to entries
+    in those paths — a ``--changed-only`` run only analyzed a slice of the
+    repo, so baseline entries outside the slice trivially match nothing
+    and must not be reported as stale."""
     new: List[Finding] = []
     grandfathered: List[Finding] = []
     seen: set = set()
@@ -76,7 +81,8 @@ def apply_baseline(findings: Sequence[Finding], baseline: Dict[Key, str]):
             seen.add(key)
         else:
             new.append(f)
-    stale = sorted(k for k in baseline if k not in seen)
+    stale = sorted(k for k in baseline if k not in seen
+                   and (restrict_paths is None or k[1] in restrict_paths))
     return new, grandfathered, stale
 
 

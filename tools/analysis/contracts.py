@@ -30,9 +30,20 @@ C3  donation — the per-generation ``_batch_err`` dispatch donates the
 C4  one dispatch — scoring a generation issues exactly ONE jitted call
     per compile bucket (the evaluator folds the validation subsets), and
     the harness evaluator is in the folded regime at all.
+C5  lane independence — the banked ``forward_population`` jaxpr (f32 and
+    packed lanes) and the serving ``forward_decode`` jaxpr must be
+    *lane-independent* along the population axis: a per-variable batch-
+    axis taint seeded at the qp stack (and per-lane feats) must flow
+    through every eqn without being contracted, permuted or mixed (the
+    ``dataflow`` engine's per-primitive axis-transfer rules), and must
+    reach every output. This is the machine-checked form of the serving
+    tier's population-axis-as-request-axis claim. Detector liveness: a
+    deliberately lane-mixing wrapper (output flipped along the population
+    axis) must FAIL the proof, or the harness cannot discriminate.
 
 Contract findings anchor to the target's forward module (``anchor_path``)
-at line 1 — there is no single source line for an IR property.
+at line 1 — there is no single source line for an IR property, but C5
+messages embed the failing eqn's own traceback-derived source line.
 """
 from __future__ import annotations
 
@@ -200,6 +211,47 @@ def check_harness(h) -> List[Finding]:
             continue
         for msg in sorted(set(_f64_violations(jx))):
             fail("C2", f"{label} forward_population jaxpr: {msg}")
+
+    # --- C5: lane independence (jaxpr dataflow prover) ------------------
+    # The banked dispatch jaxprs are already traced above; seed the taint
+    # at the qp stack (the only per-lane input of forward_pop) and let the
+    # dataflow engine walk every eqn. The serving decode step adds feats
+    # as a second per-lane input (population axis 0 on both).
+    import jax.numpy as jnp
+
+    from tools.analysis import dataflow as df
+
+    def c5(label: str, report: df.LaneReport) -> None:
+        for v in report.violations:
+            fail("C5", f"{label} jaxpr is not lane-independent: "
+                 f"{v.format()}")
+
+    c5("banked forward_population",
+       df.prove_lane_independence(banked, [0]))
+    if packed_jx is not None:
+        c5("packed forward_population",
+           df.prove_lane_independence(packed_jx, [0]))
+    if h.forward_decode is not None:
+        P = qp_stack.shape[0]
+        feats_lane = jnp.broadcast_to(
+            jnp.asarray(h.feats)[:1], (P,) + tuple(h.feats.shape[1:]))
+        for label, dbanks in (("decode-step (banked)", banks),) + (
+                (("decode-step (packed)", pbanks),)
+                if make_packed is not None else ()):
+            c5(label, df.trace_and_prove(
+                lambda f, qp, b=dbanks: h.forward_decode(params, f, qp, b),
+                feats_lane, qp_stack, in_axes=[0, 0]))
+
+    # detector liveness: a wrapper that flips the population axis of every
+    # output MUST fail the proof, or C5 is proving nothing on this harness
+    evil = jax.make_jaxpr(lambda qp: jax.tree_util.tree_map(
+        lambda t: t[::-1], h.forward_pop(params, h.feats, qp, banks)))(
+            qp_stack)
+    if df.prove_lane_independence(evil, [0]).ok:
+        fail("C5", "sanity: a deliberately lane-mixing forward (output "
+             "flipped along the population axis) passed the lane-"
+             "independence proof — the detector is not live on this "
+             "harness")
 
     # --- C3 + C4 need the real evaluator --------------------------------
     ev = h.make_evaluator()

@@ -11,7 +11,11 @@ the gate.
 Inline suppression: a ``# analyze: allow=R3 <reason>`` comment on the
 violating line (or the line directly above it) suppresses the named rules
 for that line only — the allowlist-comment escape hatch R3's jax.debug
-clause requires. ``allow=*`` suppresses every rule on that line.
+clause requires. Multiple rules may be listed (``allow=R3,C5`` or
+``allow=R3, C5``); ``allow=*`` suppresses every rule on that line. A
+pragma naming a rule id the gate does not know is itself a finding (E1)
+that no pragma can suppress — a typo'd allowlist must not silently
+suppress nothing (or, worse, look like it suppresses something).
 """
 from __future__ import annotations
 
@@ -21,7 +25,18 @@ import os
 import re
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
 
-_PRAGMA = re.compile(r"#\s*analyze:\s*allow=([A-Za-z0-9_*,-]+)")
+_PRAGMA = re.compile(
+    r"#\s*analyze:\s*allow=([A-Za-z0-9_*-]+(?:\s*,\s*[A-Za-z0-9_*-]+)*)")
+
+#: Every rule id any layer of the gate can emit. Pragmas are validated
+#: against this set (unknown id -> E1); keep in sync when adding rules.
+KNOWN_RULES = frozenset({
+    "R1", "R2", "R3", "R4", "R5", "R6",            # layer 1: AST lint
+    "C0", "C1", "C2", "C3", "C4", "C5",            # layer 2: jaxpr contracts
+    "K0", "K1", "K2", "K3", "K4",                  # layer 3: kernel verifier
+    "E0", "E1",                                    # gate-integrity errors
+    "*",
+})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,12 +46,19 @@ class Finding:
     line: int
     message: str
 
+    @property
+    def layer(self) -> str:
+        """Which gate layer emitted this finding: ``ast`` (R-rules and the
+        E gate-integrity errors, both products of source analysis),
+        ``contract`` (C-rules, jaxpr level) or ``kernel`` (K-rules)."""
+        return {"C": "contract", "K": "kernel"}.get(self.rule[:1], "ast")
+
     def format(self) -> str:
         return f"{self.path}:{self.line} {self.rule} {self.message}"
 
     def to_json(self) -> dict:
-        return {"rule": self.rule, "path": self.path, "line": self.line,
-                "message": self.message}
+        return {"rule": self.rule, "layer": self.layer, "path": self.path,
+                "line": self.line, "message": self.message}
 
 
 @dataclasses.dataclass
@@ -56,12 +78,24 @@ class ModuleContext:
         self.source = source
         self.tree = ast.parse(source, filename=path)
         self.lines = source.splitlines()
-        # line -> set of rule ids allowed by an inline pragma
+        # line -> set of rule ids allowed by an inline pragma; pragmas
+        # naming unknown rule ids become E1 findings that run_rules emits
+        # OUTSIDE the suppression path (a pragma cannot allowlist its own
+        # typo away)
         self.allow: Dict[int, Set[str]] = {}
+        self.pragma_findings: List[Finding] = []
         for i, line in enumerate(self.lines, 1):
             m = _PRAGMA.search(line)
             if m:
-                self.allow[i] = {r.strip() for r in m.group(1).split(",")}
+                rules = {r.strip() for r in m.group(1).split(",")}
+                unknown = sorted(rules - KNOWN_RULES)
+                if unknown:
+                    self.pragma_findings.append(Finding(
+                        "E1", self.path, i,
+                        f"pragma names unknown rule id(s) "
+                        f"{', '.join(unknown)} — known ids: "
+                        f"{', '.join(sorted(KNOWN_RULES - {'*'}))}"))
+                self.allow[i] = rules & KNOWN_RULES
         # local name -> dotted module ("np" -> "numpy")
         self.module_aliases: Dict[str, str] = {}
         # local name -> (module, original name) from "from m import n as l"
@@ -215,7 +249,10 @@ class Rule:
 
 
 def run_rules(ctx: ModuleContext, rules: Sequence[Rule]) -> List[Finding]:
-    out: List[Finding] = []
+    # E1 pragma errors bypass suppression by construction: an unknown id
+    # never enters ctx.allow, and a `*` on the same line must not hide the
+    # typo either
+    out: List[Finding] = list(ctx.pragma_findings)
     for rule in rules:
         if not rule.applies(ctx):
             continue

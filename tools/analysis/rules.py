@@ -191,6 +191,24 @@ def _static_names(kwargs) -> List[str]:
     return names
 
 
+def _static_nums(kwargs) -> List[int]:
+    """Literal ints from ``static_argnums`` — the positional spelling of
+    ``static_argnames``. Only compile-time-constant indices resolve; a
+    computed argnums expression is invisible to this rule (as everywhere
+    in Layer 1)."""
+    node = kwargs.get("static_argnums")
+    nums: List[int] = []
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        nums.append(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        nums += [e.value for e in node.elts
+                 if isinstance(e, ast.Constant)
+                 and isinstance(e.value, int)
+                 and not isinstance(e.value, bool)]
+    return nums
+
+
 class RetraceHazardRule(Rule):
     id = "R4"
     doc = "silent-retrace hazards on jitted functions"
@@ -218,6 +236,18 @@ class RetraceHazardRule(Rule):
                         "unhashable as a static")
             statics = _static_names(jit.kwargs)
             all_params = params + [a.arg for a in args.kwonlyargs]
+            # static_argnums is the same contract in positional clothing:
+            # resolve each index to its parameter name so the float/mutable
+            # default checks below apply through either spelling
+            for n in _static_nums(jit.kwargs):
+                if 0 <= n < len(params):
+                    statics.append(params[n])
+                elif args.vararg is None:
+                    yield self.finding(
+                        ctx, node,
+                        f"static_argnums index {n} is out of range for "
+                        f"jitted `{jit.name}` ({len(params)} positional "
+                        f"parameter(s))")
             for s in statics:
                 if s not in all_params:
                     if args.kwarg is None and not isinstance(node,

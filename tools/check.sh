@@ -4,13 +4,20 @@
 #   0a. analyze    — repro-analyze static-analysis gate (tools/analysis):
 #                    AST invariant lint (R1 SeedSequence, R2 deprecated
 #                    entrypoints, R3 host effects in jit, R4 retrace
-#                    hazards, R5 parity-frozen dtypes) plus the jaxpr
-#                    contract checks (C1 gather-don't-requantize, C2 no
-#                    f64, C3 donation, C4 one dispatch/generation) traced
-#                    per registered SearchTarget. New findings fail; the
-#                    committed tools/analysis/baseline.json grandfathers
-#                    documented exceptions (justification required). See
-#                    ROADMAP "Static-analysis gate".
+#                    hazards incl. static_argnums, R5 parity-frozen
+#                    dtypes), the jaxpr contract checks (C1 gather-don't-
+#                    requantize, C2 no f64, C3 donation, C4 one dispatch/
+#                    generation, C5 population-lane independence via the
+#                    dataflow prover) traced per registered SearchTarget,
+#                    and the Pallas kernel verifier (K0 coverage, K1 grid/
+#                    BlockSpec divisibility, K2 index_map bounds, K3 VMEM
+#                    working set, K4 packed-layout agreement). Each layer
+#                    is timed and the whole gate must finish inside the
+#                    --max-seconds budget below — a slow gate stops being
+#                    run. New findings fail; the committed
+#                    tools/analysis/baseline.json grandfathers documented
+#                    exceptions (justification required). See ROADMAP
+#                    "Static-analysis gate".
 #
 #   1. fast lane   — unit/parity tests, slow-marked suites skipped
 #   2. slow lane   — end-to-end suites under an 8-way host-device mesh
@@ -63,8 +70,8 @@ fi
 stage="${1:-all}"
 
 run_analyze() {
-  echo "== analyze: python -m tools.analysis (lint + jaxpr contracts) =="
-  python -m tools.analysis src/ examples/ benchmarks/
+  echo "== analyze: python -m tools.analysis (lint + contracts + kernels) =="
+  python -m tools.analysis src/ examples/ benchmarks/ --max-seconds 30
 }
 
 run_api_smoke() {
